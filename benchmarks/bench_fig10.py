@@ -1,0 +1,28 @@
+"""Paper Fig. 10d: on-chip memory energy per CapsuleNet operation, for
+every CapStore organization (shows PrimaryCaps dominating and power gating
+helping everywhere BUT the high-utilization PC phase)."""
+
+from benchmarks.common import row, timed
+from repro.core import analysis, dse
+
+
+def main() -> list[str]:
+    profiles = analysis.capsnet_profiles()
+    orgs = dse.design_organizations(profiles)
+    rows = []
+    print("\n# Fig10d: org x op energy (mJ)")
+    hdr = "#   org     " + "".join(f"{p.name:>14s}" for p in profiles)
+    print(hdr)
+    for name, org in orgs.items():
+        (ev, us) = timed(dse.evaluate, org, profiles, repeats=1)
+        line = f"#   {name:7s} " + "".join(
+            f"{ev.per_op_mj[p.name]:14.4f}" for p in profiles)
+        print(line)
+        pc_share = ev.per_op_mj["PrimaryCaps"] / ev.total_mj
+        rows.append(row(f"fig10d.{name}.primarycaps_share", us,
+                        f"{pc_share:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 11 + Sec. 5.2: the COMPLETE accelerator with the selected
+CapStore design (PG-SEP): energy and area breakdowns, and the headline
+reductions vs (a) all-on-chip [11] and (b) the SMP hierarchy."""
+
+from benchmarks.common import row, timed
+from repro.core import analysis, dse
+
+
+def main() -> list[str]:
+    profiles = analysis.capsnet_profiles()
+    orgs = dse.design_organizations(profiles)
+    evs = {n: dse.evaluate(o, profiles) for n, o in orgs.items()}
+    a = dse.all_onchip_system(profiles)
+    b = dse.hierarchy_system(profiles, evs["SMP"])
+    best = dse.best_design(profiles)
+    (c, us) = timed(dse.hierarchy_system, profiles, best.evaluation)
+
+    print(f"\n# Fig11 energy (mJ): accel {c.accelerator_mj:.3f} buf "
+          f"{c.buffers_mj:.3f} onchip {c.onchip_mj:.3f} offchip "
+          f"{c.offchip_mj:.3f} (accel share {c.accelerator_mj/c.total_mj:.1%}"
+          f", paper: 4-5%)")
+    print(f"# Fig11 area (mm2): onchip {c.onchip_area_mm2:.2f} total "
+          f"{c.total_area_mm2:.2f}")
+    rows = [
+        row("fig11.total_vs_all_onchip", us,
+            f"{1 - c.total_mj / a.total_mj:.3f} (paper: 0.78)"),
+        row("fig11.total_vs_hierarchy_b", us,
+            f"{1 - c.total_mj / b.total_mj:.3f} (paper: 0.46)"),
+        row("fig11.onchip_vs_smp", us,
+            f"{1 - best.total_mj / evs['SMP'].total_mj:.3f} (paper: 0.86)"),
+        row("fig11.onchip_area_vs_smp", us,
+            f"{1 - best.evaluation.area_mm2 / evs['SMP'].area_mm2:.3f} "
+            f"(paper: 0.47)"),
+        row("fig11.total_area_vs_all_onchip", us,
+            f"{1 - c.total_area_mm2 / a.total_area_mm2:.3f} (paper: 0.25)"),
+        row("fig11.accel_share", us,
+            f"{c.accelerator_mj / c.total_mj:.3f} (paper: 0.04-0.05)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper Fig. 4: per-operation resource requirements of CapsuleNet
+inference on the CapsAcc 16x16 array -- (a) total on-chip memory,
+(b) cycles, (c) per-component memory, (d/e) reads+writes per component."""
+
+from benchmarks.common import row, timed
+from repro.core import analysis
+
+
+def main() -> list[str]:
+    profiles, us = timed(analysis.capsnet_profiles)
+    rows = []
+    print("\n# Fig4a/b: op, total_mem_B, cycles (x repeats)")
+    for p in profiles:
+        print(f"#   {p.name:14s} {p.total_mem:9.0f} B  "
+              f"{p.total_cycles:10.0f} cyc (x{p.repeats})")
+    print("# Fig4c: op, data_B, weight_B, accum_B")
+    for p in profiles:
+        print(f"#   {p.name:14s} {p.data_mem:9.0f} {p.weight_mem:9.0f} "
+              f"{p.accum_mem:9.0f}")
+    print("# Fig4d/e: op, reads(d/w/a), writes(d/w/a)")
+    for p in profiles:
+        print(f"#   {p.name:14s} R {p.data_reads:12.0f} {p.weight_reads:12.0f}"
+              f" {p.accum_reads:12.0f} | W {p.data_writes:10.0f}"
+              f" {p.weight_writes:10.0f} {p.accum_writes:12.0f}")
+    peak = analysis.peak_total_mem(profiles)
+    cyc = analysis.total_cycles(profiles)
+    rows.append(row("fig4.peak_onchip_bytes", us, f"{peak:.0f}"))
+    rows.append(row("fig4.total_cycles", us, f"{cyc:.0f}"))
+    rows.append(row("fig4.peak_op", us,
+                    max(profiles, key=lambda p: p.total_mem).name))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

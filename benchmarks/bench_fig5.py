@@ -1,0 +1,35 @@
+"""Paper Fig. 5: energy breakdown of (a) the all-on-chip CapsAcc [11] vs
+(b) the on-chip + off-chip hierarchy."""
+
+from benchmarks.common import row, timed
+from repro.core import analysis, dse
+
+
+def main() -> list[str]:
+    profiles = analysis.capsnet_profiles()
+    orgs = dse.design_organizations(profiles)
+
+    (a, us_a) = timed(dse.all_onchip_system, profiles)
+    ev_smp = dse.evaluate(orgs["SMP"], profiles)
+    (b, us_b) = timed(dse.hierarchy_system, profiles, ev_smp)
+
+    print(f"\n# Fig5a all-on-chip[11]: accel {a.accelerator_mj:.3f} buf "
+          f"{a.buffers_mj:.3f} onchip {a.onchip_mj:.3f} mJ "
+          f"(mem {a.memory_fraction:.1%})")
+    print(f"# Fig5b hierarchy/SMP : accel {b.accelerator_mj:.3f} buf "
+          f"{b.buffers_mj:.3f} onchip {b.onchip_mj:.3f} offchip "
+          f"{b.offchip_mj:.3f} mJ (mem {b.memory_fraction:.1%})")
+    saving = 1 - b.total_mj / a.total_mj
+    rows = [
+        row("fig5.all_onchip_total_mj", us_a, f"{a.total_mj:.4f}"),
+        row("fig5.hierarchy_total_mj", us_b, f"{b.total_mj:.4f}"),
+        row("fig5.hierarchy_saving", us_b,
+            f"{saving:.3f} (paper: 0.66)"),
+        row("fig5.memory_fraction", us_b,
+            f"{b.memory_fraction:.3f} (paper: 0.96)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    main()

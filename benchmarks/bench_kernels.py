@@ -1,0 +1,53 @@
+"""Kernel microbenches: wall time of the Pallas kernels (interpret mode on
+CPU -- correctness-path timing, NOT TPU perf) + allclose deltas vs the
+pure-jnp oracles.  TPU perf is assessed structurally via the planner and
+the roofline (see EXPERIMENTS.md)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main() -> list[str]:
+    rows = []
+    # CapsuleNet-MNIST-shaped inputs (the paper's workload)
+    u = jax.random.normal(KEY, (1, 1152, 8))
+    w = jax.random.normal(KEY, (1152, 160, 8))
+    (votes, us) = timed(lambda: np.asarray(ops.caps_votes(u, w)), repeats=2)
+    err = np.abs(votes - np.asarray(ref.caps_votes(u, w))).max()
+    rows.append(row("kernels.caps_votes_mnist", us, f"maxerr={err:.2e}"))
+
+    uh = 0.1 * jax.random.normal(KEY, (1, 1152, 160))
+    (v, us) = timed(lambda: np.asarray(ops.routing(uh, iters=3)), repeats=2)
+    err = np.abs(v - np.asarray(
+        ref.routing(uh.reshape(1, 1152, 10, 16), 3).reshape(1, 160))).max()
+    rows.append(row("kernels.routing_fused_mnist", us, f"maxerr={err:.2e}"))
+
+    x = jax.random.normal(KEY, (4096, 256))
+    (s, us) = timed(lambda: np.asarray(ops.squash(x)), repeats=2)
+    err = np.abs(s - np.asarray(ref.squash(x))).max()
+    rows.append(row("kernels.squash_4kx256", us, f"maxerr={err:.2e}"))
+
+    wgt = 0.1 * jax.random.normal(KEY, (1024,))
+    xr = jax.random.normal(KEY, (2048, 1024))
+    (y, us) = timed(lambda: np.asarray(ops.rmsnorm(xr, wgt)), repeats=2)
+    err = np.abs(y - np.asarray(ref.rmsnorm(xr, wgt))).max()
+    rows.append(row("kernels.rmsnorm_2kx1k", us, f"maxerr={err:.2e}"))
+
+    q = jax.random.normal(KEY, (1, 4, 256, 64))
+    k = jax.random.normal(KEY, (1, 4, 256, 64))
+    v2 = jax.random.normal(KEY, (1, 4, 256, 64))
+    (o, us) = timed(lambda: np.asarray(
+        ops.flash_attention(q, k, v2, causal=True)), repeats=2)
+    err = np.abs(o - np.asarray(ref.attention(q, k, v2, causal=True))).max()
+    rows.append(row("kernels.flash_attn_256", us, f"maxerr={err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Headline-claim validation table: our model vs the paper's published
+numbers (EXPERIMENTS.md Sec. Paper-validation)."""
+
+from benchmarks.common import row, timed
+from repro.core import analysis, dse
+
+
+def main() -> list[str]:
+    profiles = analysis.capsnet_profiles()
+    orgs = dse.design_organizations(profiles)
+    evs = {n: dse.evaluate(o, profiles) for n, o in orgs.items()}
+    a = dse.all_onchip_system(profiles)
+    b = dse.hierarchy_system(profiles, evs["SMP"])
+    best = dse.best_design(profiles)
+    c = dse.hierarchy_system(profiles, best.evaluation)
+
+    claims = [
+        ("memory_energy_fraction", b.memory_fraction, 0.96),
+        ("hierarchy_saving_vs_all_onchip", 1 - b.total_mj / a.total_mj,
+         0.66),
+        ("pgsep_onchip_vs_smp", 1 - evs["PG-SEP"].total_mj
+         / evs["SMP"].total_mj, 0.86),
+        ("total_vs_all_onchip", 1 - c.total_mj / a.total_mj, 0.78),
+        ("total_vs_hierarchy_b", 1 - c.total_mj / b.total_mj, 0.46),
+        ("onchip_area_vs_smp", 1 - best.evaluation.area_mm2
+         / evs["SMP"].area_mm2, 0.47),
+        ("total_area_vs_all_onchip", 1 - c.total_area_mm2
+         / a.total_area_mm2, 0.25),
+        ("accel_energy_share", c.accelerator_mj / c.total_mj, 0.045),
+        ("dse_selects_pg_sep", 1.0 if best.org_name == "PG-SEP" else 0.0,
+         1.0),
+        ("sep_larger_than_smp", orgs["SEP"].total_bytes
+         / orgs["SMP"].total_bytes, 2.26),
+    ]
+    rows = []
+    print("\n# paper-validation: claim, ours, paper, |delta|")
+    for name, ours, paper in claims:
+        print(f"#   {name:32s} {ours:7.3f} {paper:7.3f} "
+              f"{abs(ours - paper):6.3f}")
+        rows.append(row(f"validation.{name}", 0.0,
+                        f"ours={ours:.3f};paper={paper:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

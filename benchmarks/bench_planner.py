@@ -1,0 +1,32 @@
+"""TPU adaptation: CapStore planner DSE over Pallas block shapes for the
+paper's workloads AND representative LM matmuls (DESIGN.md Sec. 2)."""
+
+from benchmarks.common import row, timed
+from repro.core.planner import (CAPSNET_WORKLOADS, MatmulWorkload,
+                                arithmetic_intensity, plan_matmul)
+
+LM_WORKLOADS = [
+    ("gemma2-qkv(4k)", MatmulWorkload(m=4096, k=3584, n=4096 + 2 * 2048)),
+    ("gemma2-mlp(4k)", MatmulWorkload(m=4096, k=3584, n=14336)),
+    ("granite-mlp(4k)", MatmulWorkload(m=4096, k=2048, n=8192)),
+    ("vocab-head(4k)", MatmulWorkload(m=4096, k=3584, n=256128)),
+]
+
+
+def main() -> list[str]:
+    rows = []
+    print("\n# planner: workload, block(m,k,n), vmem_KiB, gated%, "
+          "hbm_MiB, intensity(flops/byte)")
+    for name, w in CAPSNET_WORKLOADS + LM_WORKLOADS:
+        (p, us) = timed(plan_matmul, w, repeats=1)
+        print(f"#   {name:18s} {p.block_m:5d}x{p.block_k:5d}x{p.block_n:5d}"
+              f" {p.vmem_total/1024:9.1f} {p.gated_fraction:7.1%}"
+              f" {p.hbm_bytes/2**20:9.1f} "
+              f"{arithmetic_intensity(p, w):8.1f}")
+        rows.append(row(f"planner.{name}.intensity", us,
+                        f"{arithmetic_intensity(p, w):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline table (deliverable g): reads the dry-run JSONs produced by
+``python -m repro.launch.dryrun`` and prints the per-(arch x shape x mesh)
+three-term roofline + bottleneck + MFU."""
+
+import json
+import pathlib
+
+from benchmarks.common import row
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results/dryrun"
+
+
+def load_cells(mesh: str | None = "pod16x16") -> list[dict]:
+    cells = []
+    if not RESULTS.exists():
+        return cells
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if mesh is not None and d.get("mesh") != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def main() -> list[str]:
+    rows = []
+    cells = load_cells()
+    if not cells:
+        print("# no dry-run results found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return [row("roofline.cells", 0.0, "0")]
+    ok = [c for c in cells if c["status"] == "ok"]
+    print("\n# roofline (single-pod): arch, shape, compute_s, memory_s, "
+          "collective_s, bottleneck, mfu, useful_ratio")
+    for c in ok:
+        r = c["roofline"]
+        print(f"#   {c['arch']:22s} {c['shape']:12s} {r['compute_s']:9.4f} "
+              f"{r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+              f"{r['bottleneck']:10s} {r['mfu']:7.4f} "
+              f"{r['useful_flops_ratio']:7.3f}")
+        rows.append(row(f"roofline.{c['arch']}.{c['shape']}",
+                        r["step_time_s"] * 1e6,
+                        f"bottleneck={r['bottleneck']};mfu={r['mfu']:.4f}"))
+    n_skip = sum(1 for c in cells if c["status"] == "skipped")
+    n_err = sum(1 for c in cells if c["status"] == "error")
+    rows.append(row("roofline.cells", 0.0,
+                    f"ok={len(ok)};skip={n_skip};error={n_err}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table 1/2 + Fig. 10a-c: the six CapStore organizations
+(SMP/SEP/HY x +-power-gating): sizes, area, dynamic/static/wakeup energy,
+and the full sector-count DSE."""
+
+from benchmarks.common import row, timed
+from repro.core import analysis, dse
+
+
+def main() -> list[str]:
+    profiles = analysis.capsnet_profiles()
+    orgs = dse.design_organizations(profiles)
+    rows = []
+    print("\n# Table2: org, bytes, area_mm2, dyn_mJ, stat_mJ, wake_mJ, "
+          "total_mJ")
+    for name in ("SMP", "PG-SMP", "SEP", "PG-SEP", "HY", "PG-HY"):
+        (ev, us) = timed(dse.evaluate, orgs[name], profiles, repeats=1)
+        print(f"#   {name:7s} {ev.org.total_bytes:8.0f} {ev.area_mm2:8.3f} "
+              f"{ev.dynamic_mj:8.4f} {ev.static_mj:8.4f} "
+              f"{ev.wakeup_mj:10.6f} {ev.total_mj:8.4f}")
+        rows.append(row(f"table2.{name}.total_mj", us, f"{ev.total_mj:.4f}"))
+        rows.append(row(f"table2.{name}.area_mm2", us, f"{ev.area_mm2:.3f}"))
+
+    (results, us) = timed(dse.explore, profiles, repeats=1)
+    best = results[0]
+    print("# DSE (org x sectors), best 5:")
+    for r in results[:5]:
+        print(f"#   {r.org_name:7s} S={r.sectors:4d} {r.total_mj:8.4f} mJ "
+              f"{r.area_mm2:8.3f} mm2")
+    rows.append(row("table2.dse_best", us,
+                    f"{best.org_name}/S={best.sectors} (paper: PG-SEP)"))
+    evs = {n: dse.evaluate(o, profiles) for n, o in orgs.items()}
+    red = 1 - evs["PG-SEP"].total_mj / evs["SMP"].total_mj
+    rows.append(row("table2.pgsep_vs_smp_reduction", us,
+                    f"{red:.3f} (paper: 0.86)"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Shared benchmark helpers: timing + CSV row emission."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Returns (result, microseconds_per_call)."""
+    fn(*args, **kw)                      # warmup / trace
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def row(name: str, us: float, derived: str) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

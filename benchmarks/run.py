@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure (+ the TPU-side
+planner, kernels, roofline, and paper-claim validation).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+import sys
+import traceback
+
+from benchmarks import (bench_dataflow, bench_fig4, bench_fig5, bench_fig10,
+                        bench_fig11, bench_kernels, bench_paper_validation,
+                        bench_planner, bench_roofline, bench_table2)
+
+MODULES = {
+    "fig4": bench_fig4,
+    "fig5": bench_fig5,
+    "table2": bench_table2,
+    "fig10": bench_fig10,
+    "fig11": bench_fig11,
+    "dataflow": bench_dataflow,
+    "planner": bench_planner,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+    "validation": bench_paper_validation,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            MODULES[name].main()
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

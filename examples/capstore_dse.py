@@ -1,0 +1,61 @@
+"""CapStore design-space exploration, end to end (paper Secs. 4-5 + the
+TPU planner adaptation of DESIGN.md Sec. 2):
+
+  * evaluates all six on-chip organizations (Table 2 / Fig. 10),
+  * sweeps sector counts for the power-gated variants,
+  * prints the complete-accelerator breakdown (Fig. 11),
+  * runs the SAME energy-objective DSE over Pallas block shapes for the
+    CapsuleNet and LM hot-spot matmuls (the TPU adaptation).
+
+    PYTHONPATH=src python examples/capstore_dse.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import analysis, dse  # noqa: E402
+from repro.core.planner import (CAPSNET_WORKLOADS, MatmulWorkload,  # noqa: E402
+                                arithmetic_intensity, plan_matmul)
+
+
+def main() -> None:
+    profiles = analysis.capsnet_profiles()
+    orgs = dse.design_organizations(profiles)
+
+    print("== ASIC organizations (paper Table 2) ==")
+    print(f"{'org':8s} {'bytes':>8s} {'area mm2':>9s} {'dyn mJ':>8s} "
+          f"{'stat mJ':>8s} {'total mJ':>9s}")
+    for name in ("SMP", "PG-SMP", "SEP", "PG-SEP", "HY", "PG-HY"):
+        ev = dse.evaluate(orgs[name], profiles)
+        print(f"{name:8s} {ev.org.total_bytes:8.0f} {ev.area_mm2:9.3f} "
+              f"{ev.dynamic_mj:8.4f} {ev.static_mj:8.4f} {ev.total_mj:9.4f}")
+
+    print("\n== sector sweep (power-gated orgs) ==")
+    for r in dse.explore(profiles)[:6]:
+        print(f"{r.org_name:8s} S={r.sectors:4d} {r.total_mj:8.4f} mJ")
+
+    best = dse.best_design(profiles)
+    a = dse.all_onchip_system(profiles)
+    c = dse.hierarchy_system(profiles, best.evaluation)
+    print(f"\n== complete accelerator with {best.org_name} (Fig. 11) ==")
+    print(f"accelerator {c.accelerator_mj:7.3f} mJ")
+    print(f"buffers     {c.buffers_mj:7.3f} mJ")
+    print(f"on-chip mem {c.onchip_mj:7.3f} mJ")
+    print(f"off-chip    {c.offchip_mj:7.3f} mJ")
+    print(f"total       {c.total_mj:7.3f} mJ "
+          f"(-{1 - c.total_mj/a.total_mj:.0%} vs all-on-chip [11])")
+
+    print("\n== TPU planner: same DSE over Pallas BlockSpecs ==")
+    lm = [("gemma2-mlp", MatmulWorkload(m=4096, k=3584, n=14336)),
+          ("vocab-head", MatmulWorkload(m=4096, k=3584, n=256128))]
+    for name, w in CAPSNET_WORKLOADS + lm:
+        p = plan_matmul(w)
+        print(f"{name:20s} block {p.block_m:5d}x{p.block_k:5d}x{p.block_n:5d}"
+              f"  VMEM {p.vmem_total/2**20:5.2f} MiB"
+              f"  gated {p.gated_fraction:5.1%}"
+              f"  AI {arithmetic_intensity(p, w):7.1f} flops/B")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: the paper end-to-end in ~a minute on CPU.
+
+1. Train the CapsuleNet (Sabour et al. 2017) on synthetic MNIST digits.
+2. Profile its inference on the CapsAcc 16x16 array (paper Fig. 4).
+3. Run the CapStore DSE and report the selected memory design (Table 2).
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 60]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core import analysis, capsnet, dse  # noqa: E402
+from repro.train.data import DataConfig, mnist_batch  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    # 1. train a reduced CapsuleNet on synthetic digits -------------------
+    cfg = get_smoke_config("capsnet-mnist")
+    params = capsnet.init_params(jax.random.PRNGKey(0), cfg)
+    dc = DataConfig(kind="mnist", global_batch=args.batch)
+    print(f"== training CapsuleNet ({cfg.num_primary} primary capsules) ==")
+    for step in range(args.steps):
+        b = mnist_batch(dc, step, image_hw=cfg.image_hw)
+        params, m = capsnet.train_step(params, b["images"], b["labels"],
+                                       cfg, lr=3e-2)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                  f"acc {float(m['accuracy']):.2f}")
+
+    # 2. memory analysis of the full-size CapsuleNet (paper Fig. 4) -------
+    print("\n== CapsAcc memory analysis (full MNIST CapsuleNet) ==")
+    profiles = analysis.capsnet_profiles()
+    for p in profiles:
+        print(f"{p.name:14s} mem {p.total_mem/1024:7.1f} KiB  "
+              f"cycles {p.total_cycles:9.0f}  offchip "
+              f"{(p.offchip_reads + p.offchip_writes)*p.repeats:9.0f}")
+
+    # 3. CapStore DSE (paper Table 2) --------------------------------------
+    print("\n== CapStore design space exploration ==")
+    results = dse.explore(profiles)
+    for r in results[:4]:
+        print(f"{r.org_name:7s} S={r.sectors:4d}  {r.total_mj:7.4f} mJ  "
+              f"{r.area_mm2:7.2f} mm^2")
+    best = results[0]
+    print(f"\nselected design: {best.org_name} with {best.sectors} "
+          f"sectors/bank (paper selects PG-SEP)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.configs.registry import (  # noqa: F401
+    LM_ARCHS,
+    canonical,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)

@@ -1,0 +1,356 @@
+"""CapsAcc dataflow model: per-operation memory requirements and accesses.
+
+Reproduces the structure of CapStore Fig. 4: for every operation of the
+CapsuleNet (Sabour et al. 2017) MNIST inference on a 16x16 systolic array we
+derive
+
+  * cycles                       (Fig. 4b)
+  * on-chip size per component   (Fig. 4a/4c: data / weight / accumulator)
+  * reads+writes per component   (Fig. 4d/4e)
+  * off-chip accesses            (paper Eq. (1)/(2))
+
+The paper's exact byte values are figure-bound and not recoverable from the
+text, so the numbers here are re-derived from first principles with the
+following documented dataflow assumptions (chosen to be consistent with all
+of the paper's qualitative statements -- see DESIGN.md Sec. 1):
+
+  * activations/weights are 16-bit fixed point, accumulators 32-bit
+    (CapsAcc uses 25-bit internal accumulation; we round up to 32);
+  * convolutions run output-stationary over *all* output channels
+    (partial sums for the whole dense output live in the accumulator
+    memory, strided selection happens on write-back) -> accumulator is the
+    largest component of every operation and PrimaryCaps is the peak op;
+  * conv weights stream through a double-buffered 16x16 tile
+    (weight reuse across output positions -> tiny weight memory);
+  * ClassCaps weights have no reuse at all and stream through a larger
+    prefetch buffer;
+  * all routing state (u_hat, b, c, s, v) stays on-chip across the routing
+    iterations: u_hat lives in the accumulator memory where CC-FC produced
+    it, coupling coefficients play the role of "weights".
+
+A matmul-view of each operation drives the access counts: an [M,K] x [K,N]
+product on the 16x16 array reads each weight once (weight-stationary
+streaming), re-reads each input element once per 16-wide output-column
+group, and performs one accumulator read-modify-write per 16-deep K tile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+ARRAY_DIM = 16          # 16x16 processing elements
+ACT_BYTES = 2           # 16-bit activations / weights
+ACC_BYTES = 4           # 32-bit partial sums
+
+# CapsuleNet (MNIST) shape constants [Sabour et al. 2017]
+IN_H = IN_W = 28
+CONV1_K, CONV1_CIN, CONV1_COUT = 9, 1, 256
+CONV1_OUT = 20                           # 28 - 9 + 1
+PC_K, PC_CIN, PC_COUT, PC_STRIDE = 9, 256, 256, 2
+PC_OUT = 6                               # floor((20 - 9)/2) + 1
+NUM_PRIMARY = PC_OUT * PC_OUT * 32       # 1152 capsules
+PRIMARY_DIM = 8
+NUM_CLASSES = 10
+CLASS_DIM = 16
+ROUTING_ITERS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class OperationProfile:
+    """Resource profile of one CapsuleNet inference operation."""
+
+    name: str
+    macs: float
+    cycles: float
+    # on-chip requirement (bytes) per component
+    data_mem: float
+    weight_mem: float
+    accum_mem: float
+    # on-chip accesses (element granularity)
+    data_reads: float
+    data_writes: float
+    weight_reads: float
+    weight_writes: float
+    accum_reads: float
+    accum_writes: float
+    # off-chip accesses
+    offchip_reads: float = 0.0
+    offchip_writes: float = 0.0
+    repeats: int = 1  # routing ops execute once per routing iteration
+
+    @property
+    def total_mem(self) -> float:
+        return self.data_mem + self.weight_mem + self.accum_mem
+
+    @property
+    def total_cycles(self) -> float:
+        return self.cycles * self.repeats
+
+    def component(self, name: str) -> float:
+        return {"data": self.data_mem, "weight": self.weight_mem,
+                "accum": self.accum_mem}[name]
+
+    def accesses(self, name: str) -> float:
+        r = {"data": self.data_reads, "weight": self.weight_reads,
+             "accum": self.accum_reads}[name]
+        w = {"data": self.data_writes, "weight": self.weight_writes,
+             "accum": self.accum_writes}[name]
+        return (r + w) * self.repeats
+
+
+def _tiles(n: int, t: int = ARRAY_DIM) -> int:
+    return math.ceil(n / t)
+
+
+def _matmul_accesses(m: int, k: int, n: int) -> dict:
+    """Access counts for [M,K]x[K,N] on the 16x16 weight-stationary array."""
+    kt = _tiles(k)
+    nt = _tiles(n)
+    return dict(
+        weight_reads=float(k * n),                 # each weight read once
+        data_reads=float(m * k * nt),              # re-stream per col-group
+        accum_writes=float(m * n * kt),            # partial per K tile
+        accum_reads=float(m * n * max(kt - 1, 0)),  # read-modify-write
+        cycles=float(_tiles(m) * k * nt),
+        macs=float(m) * k * n,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-operation profiles
+# ---------------------------------------------------------------------------
+
+def conv1_profile() -> OperationProfile:
+    m = CONV1_OUT * CONV1_OUT                  # 400 output positions
+    k = CONV1_K * CONV1_K * CONV1_CIN          # 81
+    n = CONV1_COUT                             # 256
+    a = _matmul_accesses(m, k, n)
+    in_elems = IN_H * IN_W * CONV1_CIN
+    w_elems = k * n
+    return OperationProfile(
+        name="Conv1",
+        macs=a["macs"],
+        cycles=a["cycles"],
+        data_mem=in_elems * ACT_BYTES,                       # full (tiny) input
+        weight_mem=2 * CONV1_K * CONV1_K * CONV1_CIN * ARRAY_DIM * ACT_BYTES,
+        accum_mem=m * n * ACC_BYTES,                         # dense output @32b
+        data_reads=a["data_reads"],
+        data_writes=float(in_elems),
+        weight_reads=a["weight_reads"],
+        weight_writes=float(w_elems),
+        accum_reads=a["accum_reads"],
+        accum_writes=a["accum_writes"] + m * n,              # final writeback
+    )
+
+
+def primarycaps_profile() -> OperationProfile:
+    # Dense conv over the 20x20 grid; stride-2 selection on write-back.
+    m_dense = (CONV1_OUT - PC_K + 1 + (PC_STRIDE - 1)) ** 2  # positions computed
+    m = PC_OUT * PC_OUT                                       # 36 kept positions
+    k = PC_K * PC_K * PC_CIN                                  # 20736
+    n = PC_COUT
+    a = _matmul_accesses(m, k, n)
+    in_elems = CONV1_OUT * CONV1_OUT * PC_CIN                 # 102400
+    w_elems = k * n                                           # 5.3M (streamed)
+    return OperationProfile(
+        name="PrimaryCaps",
+        macs=a["macs"],
+        cycles=a["cycles"],
+        data_mem=in_elems * ACT_BYTES,                        # full input fmap
+        weight_mem=2 * ARRAY_DIM * ARRAY_DIM * ACT_BYTES,     # streaming tile
+        accum_mem=CONV1_OUT * CONV1_OUT * n * ACC_BYTES,      # dense pre-stride grid
+        data_reads=a["data_reads"],
+        data_writes=float(in_elems),
+        weight_reads=a["weight_reads"],
+        weight_writes=float(w_elems),
+        accum_reads=a["accum_reads"],
+        accum_writes=a["accum_writes"] + m * n,
+        # PrimaryCaps peak: full input residency + dense accumulation makes
+        # this the largest-footprint operation (paper Fig. 4a).
+    )
+
+
+def classcaps_fc_profile() -> OperationProfile:
+    # Votes u_hat[i, j, d] = sum_c W[i, j, d, c] * u[i, c]
+    m = NUM_PRIMARY                # 1152 input capsules
+    k = PRIMARY_DIM                # 8
+    n = NUM_CLASSES * CLASS_DIM    # 160 outputs per capsule
+    a = _matmul_accesses(m, k, n)
+    u_elems = m * k
+    w_elems = m * k * n            # weights unique per (i, j): no reuse
+    votes = m * n
+    stream_group = 16              # i-capsules prefetched per group
+    return OperationProfile(
+        name="ClassCaps-FC",
+        macs=a["macs"],
+        cycles=a["cycles"],
+        data_mem=u_elems * ACT_BYTES,
+        weight_mem=2 * stream_group * k * n * ACT_BYTES,      # prefetch buffer
+        accum_mem=votes * ACT_BYTES + ARRAY_DIM * n * ACC_BYTES,
+        data_reads=a["data_reads"],
+        data_writes=float(u_elems),
+        weight_reads=float(w_elems),
+        weight_writes=float(w_elems),                          # streamed in
+        accum_reads=a["accum_reads"],
+        accum_writes=a["accum_writes"] + votes,
+    )
+
+
+def _routing_state_mem() -> tuple[float, float]:
+    """(accumulator-resident routing state, coupling-coefficient bytes)."""
+    votes = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM * ACT_BYTES   # u_hat @16b
+    logits = NUM_PRIMARY * NUM_CLASSES * ACC_BYTES              # b @32b
+    s = NUM_CLASSES * CLASS_DIM * ACC_BYTES
+    return votes + logits + s, NUM_PRIMARY * NUM_CLASSES * ACT_BYTES
+
+
+def sum_squash_profile() -> OperationProfile:
+    # s_j = sum_i c_ij * u_hat_ij ; v_j = squash(s_j); executed per iteration.
+    votes = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM
+    macs = float(votes)                       # one MAC per vote element
+    m, k = NUM_CLASSES * CLASS_DIM, NUM_PRIMARY
+    cycles = float(_tiles(m) * k)             # reduction over i, 16 cols wide
+    acc_state, c_bytes = _routing_state_mem()
+    v_elems = NUM_CLASSES * CLASS_DIM
+    return OperationProfile(
+        name="Sum+Squash",
+        macs=macs,
+        cycles=cycles + v_elems * 4,          # squash pipeline tail
+        data_mem=v_elems * ACT_BYTES * 4,     # v + squash temporaries
+        weight_mem=c_bytes,                   # c_ij act as weights
+        accum_mem=acc_state,
+        data_reads=float(v_elems * 2),
+        data_writes=float(v_elems),
+        weight_reads=float(NUM_PRIMARY * NUM_CLASSES),
+        weight_writes=0.0,
+        accum_reads=float(votes),             # u_hat streamed from accum mem
+        accum_writes=float(m * _tiles(k)),
+        repeats=ROUTING_ITERS,
+    )
+
+
+def update_sum_profile() -> OperationProfile:
+    # b_ij += u_hat_ij . v_j ; c = softmax_j(b): executed per iteration.
+    votes = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM
+    macs = float(votes)
+    m, k = NUM_PRIMARY * NUM_CLASSES, CLASS_DIM
+    cycles = float(_tiles(m) * k)
+    acc_state, c_bytes = _routing_state_mem()
+    v_elems = NUM_CLASSES * CLASS_DIM
+    bij = NUM_PRIMARY * NUM_CLASSES
+    return OperationProfile(
+        name="Update+Sum",
+        macs=macs,
+        cycles=cycles + bij / ARRAY_DIM,      # softmax pass
+        data_mem=v_elems * ACT_BYTES * 4,
+        weight_mem=c_bytes + v_elems * ACT_BYTES,
+        accum_mem=acc_state,
+        data_reads=float(v_elems),
+        data_writes=0.0,
+        weight_reads=float(v_elems + bij),    # v + c refresh
+        weight_writes=float(bij),             # softmax result -> c
+        accum_reads=float(votes + bij),
+        accum_writes=float(bij),
+        repeats=ROUTING_ITERS,
+    )
+
+
+def _linebuf_variant(ops: list[OperationProfile]) -> list[OperationProfile]:
+    """Alternative dataflow ('linebuf'): convolutions keep only a
+    kernel-height line buffer of the input plus a 3-row accumulator strip
+    (instead of full-fmap residency), and the votes live in the DATA
+    memory during routing.  The paper's Fig. 4 bar values are not
+    recoverable from the text, so both dataflows are exposed and compared
+    in ``benchmarks/bench_dataflow.py``: 'resident' (default) satisfies
+    all of the paper's qualitative claims; 'linebuf' trades PrimaryCaps
+    footprint for higher power-gating headroom (closer to the paper's
+    published PG savings)."""
+    c1, pc, cc, ss, us = ops
+    c1 = dataclasses.replace(
+        c1, accum_mem=3 * CONV1_OUT * CONV1_COUT * ACC_BYTES)  # 3-row strip
+    pc = dataclasses.replace(
+        pc,
+        data_mem=PC_K * CONV1_OUT * PC_CIN * ACT_BYTES,        # line buffer
+        accum_mem=3 * PC_OUT * PC_COUT * ACC_BYTES,
+        # input streamed from off-chip once per 16-channel output group
+        data_writes=pc.data_writes * (PC_COUT // ARRAY_DIM),
+    )
+    votes_b = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM * ACT_BYTES
+    logits_b = NUM_PRIMARY * NUM_CLASSES * ACC_BYTES
+    cc = dataclasses.replace(
+        cc, data_mem=cc.data_mem + votes_b,                    # votes in data
+        accum_mem=ARRAY_DIM * NUM_CLASSES * CLASS_DIM * ACC_BYTES)
+    ss = dataclasses.replace(ss, data_mem=votes_b + ss.data_mem,
+                             accum_mem=logits_b + 2560)
+    us = dataclasses.replace(us, data_mem=votes_b + us.data_mem,
+                             accum_mem=logits_b + 2560)
+    return [c1, pc, cc, ss, us]
+
+
+def capsnet_profiles(dataflow: str = "resident") -> list[OperationProfile]:
+    """The five operations of CapsuleNet inference, with off-chip traffic.
+
+    Off-chip accesses follow paper Eq. (1)/(2): reads_i = on-chip fills
+    (weight_writes + data_writes) of op i; writes_i = data fills of op i+1
+    (the produced feature map is spilled and re-read).  The last two ops
+    (routing) never touch off-chip memory.
+
+    ``dataflow``: "resident" (default, full-fmap residency) or "linebuf"
+    (see ``_linebuf_variant``).
+    """
+    from repro.core.energy import DRAM_BYTES_PER_CYCLE
+
+    ops = [conv1_profile(), primarycaps_profile(), classcaps_fc_profile(),
+           sum_squash_profile(), update_sum_profile()]
+    if dataflow == "linebuf":
+        ops = _linebuf_variant(ops)
+    elif dataflow != "resident":
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+    out = []
+    for i, op in enumerate(ops):
+        if i < 3:
+            reads = op.weight_writes + op.data_writes          # Eq. (1)
+            writes = ops[i + 1].data_writes if i + 1 < 3 else 0.0  # Eq. (2)
+        else:
+            reads = writes = 0.0                               # routing: on-chip
+        # Operations stall when the DRAM interface cannot keep up with the
+        # streamed weights (ClassCaps-FC is memory-bound: its 2.8 MiB of
+        # reuse-free weights dominate its runtime).
+        stream_cycles = (reads + writes) * ACT_BYTES / DRAM_BYTES_PER_CYCLE
+        out.append(dataclasses.replace(
+            op, offchip_reads=reads, offchip_writes=writes,
+            cycles=max(op.cycles, stream_cycles / max(op.repeats, 1))))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Aggregates used by the DSE and benchmarks
+# ---------------------------------------------------------------------------
+
+COMPONENTS = ("data", "weight", "accum")
+
+
+def peak_total_mem(profiles: Sequence[OperationProfile]) -> float:
+    return max(p.total_mem for p in profiles)
+
+
+def peak_component_mem(profiles: Sequence[OperationProfile], comp: str) -> float:
+    return max(p.component(comp) for p in profiles)
+
+
+def min_component_mem(profiles: Sequence[OperationProfile], comp: str) -> float:
+    return min(p.component(comp) for p in profiles)
+
+
+def total_cycles(profiles: Sequence[OperationProfile]) -> float:
+    return sum(p.total_cycles for p in profiles)
+
+
+def total_macs(profiles: Sequence[OperationProfile]) -> float:
+    return sum(p.macs * p.repeats for p in profiles)
+
+
+def total_offchip_accesses(profiles: Sequence[OperationProfile]) -> float:
+    return sum((p.offchip_reads + p.offchip_writes) * p.repeats for p in profiles)

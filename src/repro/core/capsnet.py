@@ -1,0 +1,181 @@
+"""CapsuleNet (Sabour et al. 2017) in pure JAX.
+
+The network the paper profiles: Conv1 (9x9, 1->256, ReLU) -> PrimaryCaps
+(9x9 conv, 256->32 capsules x 8D, stride 2) -> ClassCaps (routing-by-
+agreement to 10 capsules x 16D), plus the optional reconstruction decoder
+and margin loss, so the end-to-end example can actually train.
+
+Routing-by-agreement is the feedback loop the paper highlights (Fig. 2);
+it is expressed with ``jax.lax.fori_loop`` so it lowers to a single compact
+HLO loop, mirroring the on-chip-resident routing state of CapStore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CapsNetConfig:
+    image_hw: int = 28
+    in_channels: int = 1
+    conv1_channels: int = 256
+    conv1_kernel: int = 9
+    pc_kernel: int = 9
+    pc_stride: int = 2
+    num_primary_groups: int = 32     # capsule groups (channels / primary_dim)
+    primary_dim: int = 8
+    num_classes: int = 10
+    class_dim: int = 16
+    routing_iters: int = 3
+    decoder_hidden: tuple[int, int] = (512, 1024)
+    use_decoder: bool = True
+
+    @property
+    def conv1_out(self) -> int:
+        return self.image_hw - self.conv1_kernel + 1
+
+    @property
+    def pc_out(self) -> int:
+        return (self.conv1_out - self.pc_kernel) // self.pc_stride + 1
+
+    @property
+    def num_primary(self) -> int:
+        return self.pc_out * self.pc_out * self.num_primary_groups
+
+    @property
+    def pc_channels(self) -> int:
+        return self.num_primary_groups * self.primary_dim
+
+
+Params = dict[str, Any]
+
+
+def init_params(key: jax.Array, cfg: CapsNetConfig = CapsNetConfig(),
+                dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    he = jax.nn.initializers.he_normal()
+    params: Params = {
+        "conv1_w": he(k1, (cfg.conv1_kernel, cfg.conv1_kernel,
+                           cfg.in_channels, cfg.conv1_channels), dtype),
+        "conv1_b": jnp.zeros((cfg.conv1_channels,), dtype),
+        "pc_w": he(k2, (cfg.pc_kernel, cfg.pc_kernel,
+                        cfg.conv1_channels, cfg.pc_channels), dtype),
+        "pc_b": jnp.zeros((cfg.pc_channels,), dtype),
+        # W[i, j, class_dim, primary_dim]
+        "cc_w": 0.1 * jax.random.normal(
+            k3, (cfg.num_primary, cfg.num_classes, cfg.class_dim,
+                 cfg.primary_dim), dtype),
+    }
+    if cfg.use_decoder:
+        d_in = cfg.num_classes * cfg.class_dim
+        h1, h2 = cfg.decoder_hidden
+        d_out = cfg.image_hw * cfg.image_hw * cfg.in_channels
+        params["dec_w1"] = he(k4, (d_in, h1), dtype)
+        params["dec_b1"] = jnp.zeros((h1,), dtype)
+        params["dec_w2"] = he(k5, (h1, h2), dtype)
+        params["dec_b2"] = jnp.zeros((h2,), dtype)
+        params["dec_w3"] = he(k6, (h2, d_out), dtype)
+        params["dec_b3"] = jnp.zeros((d_out,), dtype)
+    return params
+
+
+def squash(s: jax.Array, axis: int = -1, eps: float = 1e-7) -> jax.Array:
+    """v = ||s||^2 / (1 + ||s||^2) * s / ||s|| (paper Sec. 2.1)."""
+    sq = jnp.sum(jnp.square(s), axis=axis, keepdims=True)
+    return (sq / (1.0 + sq)) * s * jax.lax.rsqrt(sq + eps)
+
+
+def compute_votes(u: jax.Array, cc_w: jax.Array) -> jax.Array:
+    """u_hat[b, i, j, d] = W[i, j, d, c] u[b, i, c]  (the CC-FC operation)."""
+    return jnp.einsum("bic,ijdc->bijd", u, cc_w)
+
+
+def routing_by_agreement(u_hat: jax.Array, iters: int) -> jax.Array:
+    """Dynamic routing (paper Fig. 2 feedback loop).  u_hat: [B, I, J, D]."""
+    b0 = jnp.zeros(u_hat.shape[:3], u_hat.dtype)          # logits b[b, i, j]
+    u_hat_ng = jax.lax.stop_gradient(u_hat)
+
+    def body(it, b):
+        c = jax.nn.softmax(b, axis=2)                     # over classes j
+        # Sum+Squash: s[b, j, d] = sum_i c * u_hat
+        uh = jnp.where(it < iters - 1, 0.0, 1.0)          # scalar gate
+        u_used = u_hat_ng + uh * (u_hat - u_hat_ng)       # grads last iter only
+        s = jnp.einsum("bij,bijd->bjd", c, u_used)
+        v = squash(s)
+        # Update+Sum: b += <u_hat, v>
+        return b + jnp.einsum("bijd,bjd->bij", u_hat_ng, v)
+
+    b = jax.lax.fori_loop(0, iters, body, b0)
+    c = jax.nn.softmax(b, axis=2)
+    return squash(jnp.einsum("bij,bijd->bjd", c, u_hat))  # v[b, j, d]
+
+
+def forward(params: Params, images: jax.Array,
+            cfg: CapsNetConfig = CapsNetConfig()) -> dict[str, jax.Array]:
+    """images: [B, H, W, C] in [0, 1] -> class capsules + reconstruction."""
+    x = jax.lax.conv_general_dilated(
+        images, params["conv1_w"], window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(x + params["conv1_b"])
+    x = jax.lax.conv_general_dilated(
+        x, params["pc_w"], window_strides=(cfg.pc_stride, cfg.pc_stride),
+        padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = x + params["pc_b"]
+    b = x.shape[0]
+    u = squash(x.reshape(b, cfg.num_primary, cfg.primary_dim))
+    u_hat = compute_votes(u, params["cc_w"])
+    v = routing_by_agreement(u_hat, cfg.routing_iters)     # [B, J, D]
+    lengths = jnp.linalg.norm(v, axis=-1)                  # class scores
+    out = {"class_caps": v, "lengths": lengths}
+    if cfg.use_decoder and "dec_w1" in params:
+        mask = jax.nn.one_hot(jnp.argmax(lengths, -1), cfg.num_classes,
+                              dtype=v.dtype)
+        masked = (v * mask[..., None]).reshape(b, -1)
+        h = jax.nn.relu(masked @ params["dec_w1"] + params["dec_b1"])
+        h = jax.nn.relu(h @ params["dec_w2"] + params["dec_b2"])
+        out["reconstruction"] = jax.nn.sigmoid(h @ params["dec_w3"]
+                                               + params["dec_b3"])
+    return out
+
+
+def margin_loss(lengths: jax.Array, labels: jax.Array,
+                m_pos: float = 0.9, m_neg: float = 0.1,
+                lam: float = 0.5) -> jax.Array:
+    """L_k = T_k max(0, m+ - ||v||)^2 + lam (1-T_k) max(0, ||v|| - m-)^2."""
+    t = jax.nn.one_hot(labels, lengths.shape[-1], dtype=lengths.dtype)
+    pos = jnp.square(jnp.maximum(0.0, m_pos - lengths))
+    neg = jnp.square(jnp.maximum(0.0, lengths - m_neg))
+    return jnp.mean(jnp.sum(t * pos + lam * (1.0 - t) * neg, axis=-1))
+
+
+def total_loss(params: Params, images: jax.Array, labels: jax.Array,
+               cfg: CapsNetConfig = CapsNetConfig(),
+               recon_weight: float = 0.0005) -> tuple[jax.Array, dict]:
+    out = forward(params, images, cfg)
+    loss = margin_loss(out["lengths"], labels)
+    metrics = {"margin_loss": loss}
+    if "reconstruction" in out:
+        flat = images.reshape(images.shape[0], -1)
+        rec = jnp.mean(jnp.sum(jnp.square(out["reconstruction"] - flat), -1))
+        loss = loss + recon_weight * rec
+        metrics["recon_loss"] = rec
+    metrics["accuracy"] = jnp.mean(
+        (jnp.argmax(out["lengths"], -1) == labels).astype(jnp.float32))
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(params: Params, images: jax.Array, labels: jax.Array,
+               cfg: CapsNetConfig = CapsNetConfig(),
+               lr: float = 1e-3) -> tuple[Params, dict]:
+    (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
+        params, images, labels, cfg)
+    params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return params, metrics

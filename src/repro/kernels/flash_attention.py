@@ -1,0 +1,131 @@
+"""Blocked online-softmax (flash) attention kernel.
+
+The LM-side application of the CapStore policy: attention at long context is
+memory-bound on the KV stream, so the kernel keeps the reused operands --
+the Q tile ("data memory") and the running (m, l, acc) state ("accumulator
+memory") -- resident in VMEM while K/V tiles ("weight memory") stream
+through once.  Exactly the paper's SEP organization, one VMEM region per
+role, sized by the planner.
+
+Supports: causal masking, sliding-window (Gemma local layers), logit
+softcapping (Gemma-2), decode alignment (Tq < Tk aligns ends).
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost so the scratch
+carries across the kv sweep of each q block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, block_q: int, block_k: int,
+                  q_offset: int, kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                     # [bk, d]
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [bq, bk]
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+
+    # Positions: query rows map to absolute positions q_offset + qi*bq + r
+    # (q_offset = Tk - Tq aligns ends for decode), keys to ki*bk + c.
+    rows = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[...]                                  # [bq, 1]
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                          # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * alpha
+                    + jax.lax.dot_general(
+                        p, v_ref[0].astype(jnp.float32),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        # Fully-masked rows (can happen with tiny windows) produce l = 0.
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, ...] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: [B, H, Tq, D], k/v: [B, H, Tk, D] -> [B, H, Tq, D].
+
+    H is the post-GQA-expansion head count (callers expand or vmap KV heads).
+    """
+    b, h, tq, d = q.shape
+    tk = k.shape[2]
+    scale = (d ** -0.5) if scale is None else scale
+    bq = min(block_q, tq)
+    while tq % bq:
+        bq //= 2
+    bk = min(block_k, tk)
+    while tk % bk:
+        bk //= 2
+    kv_blocks = tk // bk
+    grid = (b * h, tq // bq, kv_blocks)
+
+    qr = q.reshape(b * h, tq, d)
+    kr = k.reshape(b * h, tk, d)
+    vr = v.reshape(b * h, tk, d)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, q_offset=tk - tq,
+        kv_blocks=kv_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, tq, d)

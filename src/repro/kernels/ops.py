@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels, with CapStore-planned
+default block shapes.
+
+Every wrapper takes ``interpret`` (default True: CPU-validated execution;
+on real TPU pass False) and falls back to documented planner defaults for
+block sizes.  The oracles live in ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.planner import MatmulWorkload, plan_matmul
+from repro.kernels import ref
+from repro.kernels.caps_votes import caps_votes as _caps_votes
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.routing import routing as _routing
+from repro.kernels.squash import squash as _squash
+
+
+def planned_block_i(num_caps: int, caps_dim: int, out_dim: int) -> int:
+    """CapStore planner pick for the caps-votes i-tile."""
+    plan = plan_matmul(MatmulWorkload(m=num_caps, k=caps_dim, n=out_dim))
+    bi = max(min(plan.block_m, num_caps), 8)
+    while num_caps % bi:
+        bi //= 2
+    return max(bi, 1)
+
+
+def caps_votes(u: jax.Array, w: jax.Array, *, block_i: int | None = None,
+               interpret: bool = True) -> jax.Array:
+    """u: [B, I, C], w: [I, N, C] -> [B, I, N]."""
+    if block_i is None:
+        block_i = planned_block_i(u.shape[1], u.shape[2], w.shape[1])
+    return _caps_votes(u, w, block_i=block_i, interpret=interpret)
+
+
+def routing(u_hat: jax.Array, *, iters: int = 3, num_classes: int = 10,
+            interpret: bool = True) -> jax.Array:
+    return _routing(u_hat, iters=iters, num_classes=num_classes,
+                    interpret=interpret)
+
+
+def squash(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    return _squash(x, interpret=interpret)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
+            interpret: bool = True) -> jax.Array:
+    return _rmsnorm(x, weight, eps=eps, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=True):
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  scale=scale, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+__all__ = ["caps_votes", "routing", "squash", "rmsnorm", "flash_attention",
+           "planned_block_i", "ref"]

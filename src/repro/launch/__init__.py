@@ -1,0 +1,3 @@
+# Launchers: mesh construction, dry-run (AOT lower+compile), train/serve
+# drivers.  NOTE: dryrun must be the process entry point (it pins
+# xla_force_host_platform_device_count before jax initializes).

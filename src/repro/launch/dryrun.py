@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagates, collectives legal, memory fits) WITHOUT hardware, and extracts
+the roofline terms from the compiled artifact:
+
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all --mesh both \
+        --out results/dryrun
+
+Results are one JSON per cell consumed by benchmarks/ and EXPERIMENTS.md.
+"""  # noqa: E402
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import pathlib         # noqa: E402
+import shutil          # noqa: E402
+import tempfile        # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import LM_ARCHS, get_config  # noqa: E402
+from repro.launch import roofline as rf         # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_chips  # noqa: E402
+from repro.launch.shapes import (SHAPES, cell_supported,       # noqa: E402
+                                 input_specs)
+from repro.launch.steps import (make_prefill_step, make_serve_step,  # noqa: E402
+                                make_train_step)
+from repro.models.config import count_params    # noqa: E402
+from repro.parallel.sharding import (ShardingCtx, cache_shardings,  # noqa: E402
+                                     make_rules, param_pspecs, zero1_pspecs)
+from repro.train.optimizer import OptConfig     # noqa: E402
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_size(mesh, dp_axes) -> int:
+    n = 1
+    for a in dp_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               sp: bool = True, kv_mode: str | None = None,
+               remat: str | None = None, donate: bool = True,
+               fsdp: bool = False, bf16_softmax: bool = False,
+               grad_dtype: str = "fp32", bf16_norm: bool = False,
+               manual_tp: bool = False):
+    """Returns (lowered, compiled, meta) for one cell."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if bf16_softmax:
+        cfg = dataclasses.replace(cfg, attn_fp32_softmax=False)
+    if bf16_norm:
+        cfg = dataclasses.replace(cfg, norm_fp32=False)
+    if manual_tp:
+        cfg = dataclasses.replace(cfg, manual_tp=True)
+    if kv_mode is None:
+        kv_mode = "seq" if shape.name == "long_500k" else "heads"
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(multi_pod=multi_pod, sp=sp, kv_mode=kv_mode)
+    shd = ShardingCtx(mesh, rules)
+    specs = input_specs(cfg, shape_name)
+    dp_axes = rules.dp
+
+    if specs["kind"] == "train":
+        if fsdp:
+            # FSDP/ZeRO-3-style: params ALSO sharded over dp -> forward
+            # all-gathers weights per layer, backward reduce-scatters grads.
+            p_shard = _named(mesh, zero1_pspecs(specs["params"], mesh,
+                                                dp_axes))
+        else:
+            p_shard = _named(mesh, param_pspecs(specs["params"]))
+        step = make_train_step(cfg, OptConfig(), shd, grad_dtype=grad_dtype,
+                               grad_shardings=p_shard
+                               if grad_dtype == "bf16" else None)
+        o_shard = {"m": _named(mesh, zero1_pspecs(specs["params"], mesh,
+                                                  dp_axes)),
+                   "v": _named(mesh, zero1_pspecs(specs["params"], mesh,
+                                                  dp_axes)),
+                   "step": NamedSharding(mesh, P())}
+        b_shard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, P(dp_axes)), specs["batch"])
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1) if donate else ())
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+    elif specs["kind"] == "prefill":
+        step = make_prefill_step(cfg, shape.seq_len, shd)
+        p_shard = _named(mesh, param_pspecs(specs["params"]))
+        t_shard = NamedSharding(mesh, P(dp_axes))
+        jitted = jax.jit(step, in_shardings=(p_shard, t_shard))
+        args = (specs["params"], specs["tokens"])
+    else:  # decode
+        step = make_serve_step(cfg, shd)
+        p_shard = _named(mesh, param_pspecs(specs["params"]))
+        c_shard = cache_shardings(specs["cache"], rules, mesh)
+        b = specs["token"].shape[0]
+        tok_shard = NamedSharding(
+            mesh, P(dp_axes) if b % _dp_size(mesh, dp_axes) == 0 else P())
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, c_shard, tok_shard,
+                          NamedSharding(mesh, P())),
+            out_shardings=(tok_shard, None, c_shard),
+            donate_argnums=(1,) if donate else ())
+        args = (specs["params"], specs["cache"], specs["token"],
+                specs["index"])
+
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    # Dump the post-SPMD / pre-float-normalization HLO: the dtype truth
+    # source for the roofline (XLA:CPU promotes bf16 compute to f32).
+    dump_dir = tempfile.mkdtemp(prefix="xla_prenorm_")
+    compiled = lowered.compile(compiler_options={
+        "xla_dump_to": dump_dir,
+        "xla_dump_hlo_pass_re": "all-reduce-promotion"})
+    t2 = time.time()
+    # The snapshot BEFORE all-reduce-promotion (a CPU-pipeline pass that
+    # wraps bf16 collectives in f32 converts; TPU keeps them bf16) and
+    # before float normalization: true program dtypes + real collectives.
+    prenorm_text = None
+    for f in pathlib.Path(dump_dir).glob("*before_all-reduce-promotion*"):
+        prenorm_text = f.read_text()
+        break
+    shutil.rmtree(dump_dir, ignore_errors=True)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+            "chips": mesh_chips(mesh), "sp": sp, "kv_mode": kv_mode,
+            "remat": cfg.remat, "fsdp": fsdp, "bf16_softmax": bf16_softmax,
+            "grad_dtype": grad_dtype, "bf16_norm": bf16_norm,
+            "manual_tp": manual_tp,
+            "lower_s": t1 - t0, "compile_s": t2 - t1,
+            "dtype_corrected": prenorm_text is not None}
+    return lowered, compiled, meta, cfg, shape, prenorm_text
+
+
+def analyze_cell(compiled, meta, cfg, shape, prenorm_text=None) -> dict:
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    mem = rf.memory_analysis_dict(compiled)
+    cost = rf.cost_analysis_dict(compiled)
+    text = compiled.as_text()
+    # Loop-aware flops + HBM bytes from the FINAL (fused) HLO, with the
+    # bf16 dtype-intent shape correction; collectives from the post-SPMD
+    # PRE-float-normalization dump, whose dtypes are the program's own
+    # (XLA:CPU promotes all bf16 compute to f32 -- a real TPU would not).
+    hlo = analyze_hlo(text, prenorm_text=prenorm_text)
+    if prenorm_text is not None:
+        pre = analyze_hlo(prenorm_text)
+        hlo.collective_bytes = pre.collective_bytes
+        hlo.collective_counts = pre.collective_counts
+        hlo.collective_bytes_by_type = pre.collective_bytes_by_type
+    n_active = count_params(cfg, active_only=True)
+    n_total = count_params(cfg)
+    roof = rf.Roofline(
+        flops_per_device=hlo.flops,
+        hbm_bytes_per_device=hlo.memory_bytes,
+        collective_bytes_per_device=hlo.collective_bytes,
+        chips=meta["chips"],
+        model_flops=rf.model_flops_for(cfg, shape, n_active))
+    return {
+        **meta,
+        "params_total": n_total,
+        "params_active": n_active,
+        "memory_analysis": mem,
+        "cost_analysis_raw": {k: v for k, v in cost.items()
+                              if "{" not in k},      # per-op keys dropped
+        "collectives": {"counts": hlo.collective_counts,
+                        "bytes_by_type": hlo.collective_bytes_by_type,
+                        "total_bytes": hlo.collective_bytes},
+        "hlo_dot_count": hlo.dot_count,
+        "roofline": roof.to_dict(),
+        "hlo_bytes": len(text),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir,
+             **kw) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    ok, why = cell_supported(cfg, shape)
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_tag}
+    if not ok:
+        result = {**base, "status": "skipped", "reason": why}
+    else:
+        try:
+            lowered, compiled, meta, cfg2, shp, prenorm = lower_cell(
+                arch, shape_name, multi_pod=multi_pod, **kw)
+            result = {"status": "ok",
+                      **analyze_cell(compiled, meta, cfg2, shp,
+                                     prenorm_text=prenorm)}
+            del lowered, compiled, prenorm
+        except Exception as e:
+            result = {**base, "status": "error", "error": repr(e),
+                      "traceback": traceback.format_exc()[-4000:]}
+    if out_dir is not None:
+        out_dir = pathlib.Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_tag}.json".replace("/", "-")
+        (out_dir / fname).write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--sp", dest="sp", action="store_true", default=True)
+    ap.add_argument("--no-sp", dest="sp", action="store_false")
+    ap.add_argument("--kv-mode", default=None, choices=[None, "heads", "seq"])
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "full", "dots", "none"])
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--bf16-softmax", action="store_true")
+    ap.add_argument("--grad-dtype", default="fp32",
+                    choices=["fp32", "bf16"])
+    ap.add_argument("--bf16-norm", action="store_true")
+    ap.add_argument("--manual-tp", action="store_true")
+    args = ap.parse_args()
+
+    archs = LM_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shp, mp, args.out, sp=args.sp,
+                             kv_mode=args.kv_mode, remat=args.remat,
+                             fsdp=args.fsdp,
+                             bf16_softmax=args.bf16_softmax,
+                             grad_dtype=args.grad_dtype,
+                             bf16_norm=args.bf16_norm,
+                             manual_tp=args.manual_tp)
+                tag = f"{arch:22s} {shp:12s} {'multi' if mp else 'single'}"
+                if r["status"] == "ok":
+                    roof = r["roofline"]
+                    print(f"[ok]   {tag} bottleneck={roof['bottleneck']:10s}"
+                          f" step={roof['step_time_s']*1e3:9.3f}ms"
+                          f" mfu={roof['mfu']:.3f}"
+                          f" compile={r['compile_s']:.1f}s", flush=True)
+                elif r["status"] == "skipped":
+                    print(f"[skip] {tag} ({r['reason']})", flush=True)
+                else:
+                    failures += 1
+                    print(f"[FAIL] {tag}: {r['error']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

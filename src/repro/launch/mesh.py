@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; ``make_production_mesh`` is only called from launchers that have
+already configured the platform (dryrun sets
+``xla_force_host_platform_device_count=512`` before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None):
+    """Small mesh for CPU integration tests (8 forced host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

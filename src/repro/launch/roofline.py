@@ -1,0 +1,227 @@
+"""Roofline analysis from compiled (AOT) artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (deliverable g):
+
+    compute    = HLO_FLOPs_global / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_global / (chips * HBM_BW)
+    collective = collective_bytes_per_device / ICI_BW
+
+``cost_analysis()`` reports the per-SPMD-program (= per-device) flops and
+bytes, so global = per_device * chips and the chips factor cancels; we
+compute directly from per-device numbers and report both.
+
+collective_bytes is NOT in cost_analysis: we parse ``compiled.as_text()``
+(post-partitioning HLO) and sum the bytes each collective moves per device
+using ring-algorithm accounting:
+
+    all-reduce        2 * B * (S-1)/S        (reduce-scatter + all-gather)
+    all-gather        B_out * (S-1)/S        (B_out = gathered shape)
+    reduce-scatter    B_out * (S-1)          (input = B_out * S)
+    all-to-all        B * (S-1)/S
+    collective-permute B
+
+with S = participants per replica group (parsed from the op).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+# TPU v5e-class hardware constants (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_type: dict          # per-device bytes moved, ring accounting
+    raw_bytes_by_type: dict      # sum of operand (output) sizes, unscaled
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_type.values())
+
+    @property
+    def total_raw_bytes(self) -> float:
+        return sum(self.raw_bytes_by_type.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    counts = {c: 0 for c in _COLLECTIVES}
+    moved = {c: 0.0 for c in _COLLECTIVES}
+    raw = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        # ' %name = TYPE op-name(' ; skip -done (paired with -start).
+        m = re.search(r"=\s+(.+?)\s+(" + "|".join(_COLLECTIVES)
+                      + r")(-start)?\(", line)
+        if not m:
+            continue
+        if re.search(r"(all-reduce|all-gather|all-to-all|collective-permute"
+                     r"|reduce-scatter)-done\(", line):
+            continue
+        type_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        s = _group_size(line, default_group)
+        counts[op] += 1
+        raw[op] += b
+        if s <= 1 and op != "collective-permute":
+            continue
+        if op == "all-reduce":
+            moved[op] += 2.0 * b * (s - 1) / s
+        elif op == "all-gather":
+            moved[op] += b * (s - 1) / s
+        elif op == "reduce-scatter":
+            moved[op] += b * (s - 1)
+        elif op == "all-to-all":
+            moved[op] += b * (s - 1) / s
+        else:  # collective-permute
+            moved[op] += b
+    return CollectiveStats(counts=counts, bytes_by_type=moved,
+                           raw_bytes_by_type=raw)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops: float           # 6*N*D (train) / 2*N*D (serve), global
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step estimate: max of the three terms (full overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step estimate."""
+        denom = self.step_time_s * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape, n_params_active: int) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D per generated/scored token."""
+    d_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_params_active * d_tokens
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def hbm_bytes_estimate(cost: dict, mem: dict) -> float:
+    """Prefer cost_analysis 'bytes accessed'; else conservative estimate:
+    every argument + output + 2x temp traffic."""
+    if "bytes accessed" in cost:
+        return cost["bytes accessed"]
+    return (mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            + 2.0 * mem.get("temp_size_in_bytes", 0))

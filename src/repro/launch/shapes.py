@@ -1,0 +1,114 @@
+"""Assigned input shapes x skip policy x ShapeDtypeStruct builders.
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers ``prefill_step``;
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of seq_len) -- per the assignment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_model, init_model_cache
+from repro.models.config import ModelConfig
+from repro.train.optimizer import init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str           # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """DESIGN.md Sec. 4 skip policy."""
+    if shape.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention stack: long_500k requires "
+                       "sub-quadratic attention (see DESIGN.md)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct builders (never allocate)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg: ModelConfig, dtype) -> object:
+    shapes = jax.eval_shape(
+        lambda k: init_model(k, cfg, dtype=dtype), jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map(lambda s: _sds(s.shape, s.dtype), shapes)
+
+
+def opt_specs(params) -> object:
+    shapes = jax.eval_shape(init_opt_state, params)
+    return jax.tree_util.tree_map(lambda s: _sds(s.shape, s.dtype), shapes)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_frames":
+        return {"inputs": _sds((b, t, cfg.frontend_dim), jnp.bfloat16),
+                "targets": _sds((b, t), jnp.int32)}
+    return {"inputs": _sds((b, t), jnp.int32),
+            "targets": _sds((b, t), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec,
+                dtype=jnp.bfloat16) -> object:
+    shapes = jax.eval_shape(
+        lambda: init_model_cache(cfg, shape.global_batch, shape.seq_len,
+                                 dtype))
+    return jax.tree_util.tree_map(lambda s: _sds(s.shape, s.dtype), shapes)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> tuple:
+    """(cache, token, index) for serve_step."""
+    token = _sds((shape.global_batch, 1), jnp.int32)
+    index = _sds((), jnp.int32)
+    return cache_specs(cfg, shape), token, index
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio_frames":
+        return _sds((b, t, cfg.frontend_dim), jnp.bfloat16)
+    return _sds((b, t), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, train_dtype=jnp.float32,
+                serve_dtype=jnp.bfloat16) -> dict:
+    """All ShapeDtypeStruct stand-ins for one (arch x shape) cell."""
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape_name} skipped: {why}")
+    if shape.kind == "train":
+        params = param_specs(cfg, train_dtype)
+        return {"kind": "train", "params": params,
+                "opt_state": opt_specs(params),
+                "batch": batch_specs(cfg, shape)}
+    params = param_specs(cfg, serve_dtype)
+    if shape.kind == "prefill":
+        return {"kind": "prefill", "params": params,
+                "tokens": prefill_specs(cfg, shape)}
+    cache, token, index = decode_specs(cfg, shape)
+    return {"kind": "decode", "params": params, "cache": cache,
+            "token": token, "index": index}

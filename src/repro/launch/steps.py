@@ -1,0 +1,89 @@
+"""Step functions lowered by the dry-run and driven by the train/serve
+loops: train_step (fwd+bwd+AdamW, mixed precision), prefill_step,
+serve_step (single-token decode against a KV cache).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward, init_model_cache, lm_loss
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def cast_tree(tree, dtype, min_ndim: int = 1):
+    """Cast float leaves (>= min_ndim dims) -- the bf16 compute cast."""
+    def c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= min_ndim:
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(c, tree)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, shd=None,
+                    compute_dtype=jnp.bfloat16, grad_dtype: str = "fp32",
+                    grad_shardings=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Params are kept in fp32 (master weights); compute runs in bf16.
+    ``grad_dtype="bf16"`` differentiates w.r.t. the bf16-cast params, so
+    gradients -- and the data-parallel all-reduce wire format -- are bf16
+    (half the collective bytes); the fp32 master update happens in the
+    optimizer either way.  ``grad_shardings`` (a NamedSharding tree
+    matching params) pins the gradient reduction point BEFORE the
+    optimizer's f32 cast, so the partitioner cannot ride the all-reduce
+    on the f32 side of the convert.
+    """
+
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, shd)
+
+    def train_step(params, opt_state, batch):
+        cparams = cast_tree(params, compute_dtype)
+        if grad_dtype == "bf16":
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(cparams, batch)
+        else:
+            def f32_loss(p, batch):
+                return loss_fn(cast_tree(p, compute_dtype), batch)
+            (_, metrics), grads = jax.value_and_grad(
+                f32_loss, has_aux=True)(params, batch)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape_seq: int, shd=None,
+                      cache_dtype=jnp.bfloat16):
+    """(params, tokens) -> (last_logits, cache) (encoder: (logits, None))."""
+
+    def prefill_step(params, tokens):
+        if not cfg.has_decode:
+            logits, _, _ = forward(params, tokens, cfg=cfg, shd=shd)
+            return logits, None
+        cache = init_model_cache(cfg, tokens.shape[0], shape_seq,
+                                 cache_dtype)
+        logits, cache, _ = forward(params, tokens, cfg=cfg, shd=shd,
+                                   cache=cache,
+                                   cache_index=jnp.asarray(0, jnp.int32))
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, shd=None):
+    """(params, cache, token, index) -> (next_token, logits, cache)."""
+
+    def serve_step(params, cache, token, index):
+        logits, cache = decode_step(params, cache, token, index, cfg,
+                                    shd=shd)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits[:, -1], cache
+
+    return serve_step

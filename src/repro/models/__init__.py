@@ -1,0 +1,16 @@
+from repro.models.config import (  # noqa: F401
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    count_params,
+)
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    greedy_generate,
+    init_model,
+    init_model_cache,
+    lm_loss,
+    prefill,
+)

@@ -1,0 +1,264 @@
+"""Attention: GQA/MQA/MHA, sliding-window, softcap, bidirectional, and MLA
+(DeepSeek multi-head latent attention) -- with KV caches for decode.
+
+Decode caches:
+  * GQA:  {"k": [B, KvH, S, Dh], "v": [B, KvH, S, Dh]}
+  * MLA:  {"c_kv": [B, S, R], "k_rope": [B, S, Rr]}  (compressed -- the
+    paper's minimize-off-chip-traffic policy applied to the KV stream).
+
+MLA decode uses the *absorbed* form: q is projected into the latent space
+(q' = q_nope @ W_uk) so attention runs directly against the compressed
+cache; values are combined in latent space and up-projected once.  Tests
+verify absorbed-decode == explicit-prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if cfg.mla:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "q_proj": init_linear(ks[0], d, cfg.num_heads * qk, dtype),
+            "kv_down": init_linear(ks[1], d, m.kv_lora_rank
+                                   + m.qk_rope_head_dim, dtype),
+            "kv_up": init_linear(ks[2], m.kv_lora_rank,
+                                 cfg.num_heads * (m.qk_nope_head_dim
+                                                  + m.v_head_dim), dtype),
+            "o_proj": init_linear(ks[3], cfg.num_heads * m.v_head_dim, d,
+                                  dtype),
+        }
+    return {
+        "q_proj": init_linear(ks[0], d, cfg.num_heads * cfg.head_dim, dtype),
+        "k_proj": init_linear(ks[1], d, cfg.num_kv_heads * cfg.head_dim,
+                              dtype),
+        "v_proj": init_linear(ks[2], d, cfg.num_kv_heads * cfg.head_dim,
+                              dtype),
+        "o_proj": init_linear(ks[3], cfg.num_heads * cfg.head_dim, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache plumbing: ``cache_index`` may be a scalar (all rows aligned) or a
+# per-batch vector [B] (slot-based serving engine).
+# ---------------------------------------------------------------------------
+
+def _cache_update(buf: jax.Array, val: jax.Array, cache_index: jax.Array,
+                  seq_axis: int = 1) -> jax.Array:
+    """Insert ``val`` into ``buf`` at sequence position ``cache_index``
+    (scalar or per-batch vector) along ``seq_axis``.  Caches are stored in
+    attention layout ([B, S, ...]) so no transposes touch the full cache."""
+    val = val.astype(buf.dtype)
+    ci = jnp.asarray(cache_index)
+    if ci.ndim == 0:
+        start = tuple(ci if d == seq_axis else 0 for d in range(buf.ndim))
+        return jax.lax.dynamic_update_slice(buf, val, start)
+    def upd(b_row, v_row, i):
+        start = tuple(i if d == seq_axis - 1 else 0
+                      for d in range(b_row.ndim))
+        return jax.lax.dynamic_update_slice(b_row, v_row, start)
+    return jax.vmap(upd)(buf, val, ci)
+
+
+def _cache_positions(cache_index: jax.Array, b: int, s: int,
+                     t: int) -> jax.Array:
+    """kv positions [B, S] with unwritten slots marked -1."""
+    ci = jnp.asarray(cache_index)
+    end = jnp.broadcast_to(jnp.atleast_1d(ci), (b,))
+    idx = jnp.arange(s)[None, :]
+    return jnp.where(idx <= end[:, None] + t - 1, idx, -1)
+
+
+def query_positions(cache_index, b: int, t: int) -> jax.Array:
+    ci = jnp.asarray(cache_index)
+    base = jnp.atleast_1d(ci).reshape(-1, 1)
+    return jnp.broadcast_to(base + jnp.arange(t)[None], (b, t))
+
+
+# ---------------------------------------------------------------------------
+# Masked grouped attention core (positions-based masking)
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, kv_pos, causal: bool, window: int | None):
+    """q_pos: [B, T], kv_pos: [B, S] (< 0 marks invalid slots)."""
+    m = (kv_pos >= 0)[:, None, :]
+    if causal:
+        m &= kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= kv_pos[:, None, :] > q_pos[:, :, None] - window
+    return m  # [B, T, S]
+
+
+def grouped_attention(q, k, v, q_pos, kv_pos, *, causal, window, softcap,
+                      scale, fp32_softmax: bool = True) -> jax.Array:
+    """q: [B, T, H, Dh], k/v: [B, S, KvH, Dh] -> [B, T, H, Dh]."""
+    b, t, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q5 = q.reshape(b, t, kvh, g, dh)
+    logits = jnp.einsum("btkgd,bskd->bkgts", q5, k)
+    if fp32_softmax:
+        logits = logits.astype(jnp.float32)
+    logits *= jnp.asarray(scale, logits.dtype)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    m = _mask(q_pos, kv_pos, causal, window)                # [B, T, S]
+    neg = jnp.asarray(NEG_INF if fp32_softmax else -3e38, logits.dtype)
+    logits = jnp.where(m[:, None, None], logits, neg)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return out.reshape(b, t, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_forward(params: dict, x: jax.Array, positions: jax.Array, *,
+                cfg: ModelConfig, window: int | None, cache: dict | None,
+                cache_index: jax.Array | None, shd) -> tuple[jax.Array, dict | None]:
+    b, t, d = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    scale = cfg.query_scale if cfg.query_scale is not None else dh ** -0.5
+
+    q = (x @ params["q_proj"]).reshape(b, t, h, dh)
+    k = (x @ params["k_proj"]).reshape(b, t, kvh, dh)
+    v = (x @ params["v_proj"]).reshape(b, t, kvh, dh)
+    if shd is not None:
+        q = shd.act(q, "bthd")
+        k = shd.act(k, "btkd")
+        v = shd.act(v, "btkd")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        kv_pos = positions
+        ks, vs = k, v
+        new_cache = None
+    else:
+        # cache layout == attention layout [B, S, KvH, Dh]: the update
+        # writes one [B, T, KvH, Dh] slice and attention reads in place
+        # (no full-cache transpose/copy per step -- see EXPERIMENTS.md
+        # Perf hillclimb 3).
+        s = cache["k"].shape[1]
+        ks = _cache_update(cache["k"], k, cache_index)
+        vs = _cache_update(cache["v"], v, cache_index)
+        new_cache = {"k": ks, "v": vs}
+        kv_pos = _cache_positions(cache_index, b, s, t)
+
+    out = grouped_attention(q, ks.astype(q.dtype), vs.astype(q.dtype),
+                            positions, kv_pos, causal=cfg.causal,
+                            window=window, softcap=cfg.attn_logit_softcap,
+                            scale=scale,
+                            fp32_softmax=cfg.attn_fp32_softmax)
+    if shd is not None:
+        out = shd.act(out, "bthd")
+    out = out.reshape(b, t, h * dh)
+    if cfg.manual_tp and cache is None:
+        from repro.models.layers import rs_proj
+        return rs_proj(out, params["o_proj"], shd), new_cache
+    return out @ params["o_proj"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block
+# ---------------------------------------------------------------------------
+
+def _mla_split_up(params, cfg) -> tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    up = params["kv_up"].reshape(m.kv_lora_rank, cfg.num_heads,
+                                 m.qk_nope_head_dim + m.v_head_dim)
+    return up[..., :m.qk_nope_head_dim], up[..., m.qk_nope_head_dim:]
+
+
+def mla_forward(params: dict, x: jax.Array, positions: jax.Array, *,
+                cfg: ModelConfig, cache: dict | None,
+                cache_index: jax.Array | None, shd) -> tuple[jax.Array, dict | None]:
+    m = cfg.mla
+    b, t, d = x.shape
+    h = cfg.num_heads
+    nope, rd, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    scale = (nope + rd) ** -0.5
+
+    q = (x @ params["q_proj"]).reshape(b, t, h, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    down = x @ params["kv_down"]                        # [B, T, R + Rr]
+    c_kv, k_rope = down[..., :m.kv_lora_rank], down[..., m.kv_lora_rank:]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    w_uk, w_uv = _mla_split_up(params, cfg)             # [R, H, nope], [R, H, vd]
+
+    if cache is None:
+        # Explicit (prefill/train) form: up-project the whole sequence.
+        k_nope = jnp.einsum("btr,rhn->bthn", c_kv, w_uk)
+        v = jnp.einsum("btr,rhv->bthv", c_kv, w_uv)
+        logits = (jnp.einsum("bthn,bshn->bhts", q_nope, k_nope)
+                  + jnp.einsum("bthr,bsr->bhts", q_rope, k_rope))
+        if cfg.attn_fp32_softmax:
+            logits = logits.astype(jnp.float32)
+        logits = logits * jnp.asarray(scale, logits.dtype)
+        msk = _mask(positions, positions, cfg.causal, None)
+        logits = jnp.where(msk[:, None],
+                           logits, jnp.asarray(NEG_INF, logits.dtype)
+                           if cfg.attn_fp32_softmax
+                           else jnp.asarray(-3e38, logits.dtype))
+        p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhts,bshv->bthv", p, v)
+        new_cache = None
+    else:
+        # Absorbed (decode) form: attend in the compressed latent space.
+        s = cache["c_kv"].shape[1]
+        c_all = _cache_update(cache["c_kv"], c_kv, cache_index)
+        r_all = _cache_update(cache["k_rope"], k_rope, cache_index)
+        new_cache = {"c_kv": c_all, "k_rope": r_all}
+        kv_pos = _cache_positions(cache_index, b, s, t)
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)   # [B,T,H,R]
+        logits = (jnp.einsum("bthr,bsr->bhts", q_lat,
+                             c_all.astype(q_lat.dtype))
+                  + jnp.einsum("bthr,bsr->bhts", q_rope,
+                               r_all.astype(q_rope.dtype)))
+        if cfg.attn_fp32_softmax:
+            logits = logits.astype(jnp.float32)
+        logits = logits * jnp.asarray(scale, logits.dtype)
+        msk = _mask(positions, kv_pos, cfg.causal, None)
+        logits = jnp.where(msk[:, None],
+                           logits, jnp.asarray(NEG_INF, logits.dtype)
+                           if cfg.attn_fp32_softmax
+                           else jnp.asarray(-3e38, logits.dtype))
+        p = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhts,bsr->bthr", p, c_all.astype(p.dtype))
+        out = jnp.einsum("bthr,rhv->bthv", ctx, w_uv)
+    return out.reshape(b, t, h * vd) @ params["o_proj"], new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               num_layers: int | None = None) -> dict:
+    """Per-layer cache pytree (unstacked; the stack adds a leading dim)."""
+    if cfg.mla:
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim),
+                                    dtype)}
+    # Attention layout [B, S, KvH, Dh] (NOT [B, KvH, S, Dh]) -- avoids a
+    # full-cache transpose per decode step.
+    return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype)}

@@ -1,0 +1,173 @@
+"""Shared layers: RMSNorm, RoPE, gated MLP, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_lowp(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm with fp32 statistics but a hand-written backward in which
+    every FULL-SIZE tensor stays in the activation dtype (f32 appears only
+    in the [..., 1] reductions).  This is what keeps the backward residual
+    path -- and therefore the Megatron-TP all-reduces -- on bf16 wire
+    (EXPERIMENTS.md Perf hillclimb 2)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * (1.0 + weight.astype(x.dtype))
+
+
+def _rmsnorm_lowp_fwd(x, weight, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    scale32 = jax.lax.rsqrt(var + eps)
+    scale = scale32.astype(x.dtype)
+    y = x * scale * (1.0 + weight.astype(x.dtype))
+    return y, (x, weight, scale32)
+
+
+def _rmsnorm_lowp_bwd(eps, res, dy):
+    x, weight, scale32 = res
+    scale = scale32.astype(x.dtype)
+    w1 = (1.0 + weight.astype(x.dtype))
+    dxhat = dy * w1                                          # bf16 full-size
+    # tiny fp32 reduction: mean over the feature dim
+    m = jnp.mean((dxhat * x).astype(jnp.float32), -1, keepdims=True)
+    coef = (scale32 ** 3 * m).astype(x.dtype)                # [..., 1]
+    dx = dxhat * scale - x * coef                            # bf16 full-size
+    dw = jnp.sum((dy * x * scale).astype(jnp.float32),
+                 axis=tuple(range(dy.ndim - 1)))             # [D] fp32
+    return dx, dw.astype(weight.dtype)
+
+
+_rmsnorm_lowp.defvjp(_rmsnorm_lowp_fwd, _rmsnorm_lowp_bwd)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+            fp32: bool = True) -> jax.Array:
+    """RMSNorm with fp32 statistics.
+
+    ``fp32=True`` (paper-faithful default) also APPLIES the normalization
+    in fp32; its cast-backward promotes every backward cotangent on the
+    residual path to f32 -- doubling TP collective bytes (EXPERIMENTS.md
+    Perf hillclimb 2).  ``fp32=False`` uses the custom-VJP low-precision
+    variant (fp32 statistics, bf16 full-size tensors fwd AND bwd).
+    """
+    if fp32:
+        dtype = x.dtype
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        return ((x32 * jax.lax.rsqrt(var + eps))
+                * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+    return _rmsnorm_lowp(x, weight, eps)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+         rope_dim: int | None = None) -> jax.Array:
+    """Rotary embedding.  x: [B, T, H, D], positions: [B, T] (absolute)."""
+    d = x.shape[-1] if rope_dim is None else rope_dim
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, half]
+    # Cast cos/sin to the activation dtype BEFORE the multiply: keeps the
+    # backward cotangents in bf16 instead of silently promoting to f32.
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    rot, rest = x[..., :d], x[..., d:]
+    x1, x2 = rot[..., :half], rot[..., half:]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated, rest], axis=-1) if rest.size else rotated
+
+
+def gated_mlp(x: jax.Array, gate_w: jax.Array, up_w: jax.Array,
+              down_w: jax.Array, act: str = "silu", shd=None,
+              manual_tp: bool = False) -> jax.Array:
+    g = x @ gate_w
+    u = x @ up_w
+    if act == "gelu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        h = jax.nn.silu(g) * u
+    if shd is not None:
+        h = shd.act(h, "btf")
+    if manual_tp:
+        return rs_proj(h, down_w, shd)
+    return h @ down_w
+
+
+# ---------------------------------------------------------------------------
+# Manual Megatron-SP collectives (shard_map): the XLA:CPU partitioner emits
+# all-reduce(+slice) where reduce-scatter suffices; these express the SP
+# transitions explicitly, halving TP wire bytes (EXPERIMENTS.md Perf
+# hillclimb 2).
+# ---------------------------------------------------------------------------
+
+def _tp_size(shd) -> int:
+    return shd.mesh.shape[shd.rules.tp]
+
+
+def rs_proj(x: jax.Array, w: jax.Array, shd) -> jax.Array:
+    """Row-parallel projection with an explicit reduce-scatter over the
+    sequence dim: x [B, T, F] (F model-sharded) @ w [F, D] -> [B, T, D]
+    sequence-sharded over the model axis."""
+    if shd is None or shd.mesh is None or x.shape[1] % _tp_size(shd):
+        return x @ w
+    from jax.sharding import PartitionSpec as P
+    dp, tp = shd.rules.dp, shd.rules.tp
+
+    def f(xl, wl):
+        return jax.lax.psum_scatter(xl @ wl, tp, scatter_dimension=1,
+                                    tiled=True)
+
+    return jax.shard_map(f, mesh=shd.mesh,
+                         in_specs=(P(dp, None, tp), P(tp, None)),
+                         out_specs=P(dp, tp, None), check_vma=False)(x, w)
+
+
+def ag_seq(x: jax.Array, shd) -> jax.Array:
+    """All-gather the sequence-sharded residual (the SP->TP transition)."""
+    if shd is None or shd.mesh is None or x.shape[1] % _tp_size(shd):
+        return x
+    from jax.sharding import PartitionSpec as P
+    dp, tp = shd.rules.dp, shd.rules.tp
+
+    def f(xl):
+        return jax.lax.all_gather(xl, tp, axis=1, tiled=True)
+
+    return jax.shard_map(f, mesh=shd.mesh,
+                         in_specs=P(dp, tp, None),
+                         out_specs=P(dp, None, None), check_vma=False)(x)
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array,
+                 scale: bool, d_model: int) -> jax.Array:
+    x = jnp.take(embed, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(d_model ** 0.5, x.dtype)
+    return x
+
+
+def lm_head(x: jax.Array, embed_or_unembed: jax.Array, tied: bool,
+            softcap: float | None, fp32: bool = True,
+            valid_vocab: int | None = None) -> jax.Array:
+    w = embed_or_unembed.T if tied else embed_or_unembed
+    logits = x @ w.astype(x.dtype)
+    if fp32:
+        logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        # Mask Megatron-style vocab padding columns.
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < valid_vocab, logits, -1e30)
+    return logits
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return scale * jax.random.normal(key, (d_in, d_out), dtype)

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD -- state-space duality) block: chunked matrix form for
+train/prefill, O(1)-state recurrent form for decode.
+
+The chunked SSD algorithm is the SSM analogue of flash attention: within a
+chunk the quadratic "attention-like" term runs on the MXU; across chunks a
+small recurrent state [H, P, N] carries -- which is also exactly the
+CapStore story: the inter-chunk state is the accumulator memory (resident),
+X/B/C stream through like conv weights, and the chunk length is the tile
+size the planner reasons about.
+
+Decode cache per layer:
+    {"conv": [B, d_conv-1, CH], "ssd": [B, H, P, N]}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_ch
+
+
+def init_mamba_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    s, di, nh, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[6], (nh,))
+                 * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    return {
+        "z_proj": init_linear(ks[0], d, di, dtype),
+        "x_proj": init_linear(ks[1], d, di, dtype),
+        "b_proj": init_linear(ks[2], d, s.n_groups * s.d_state, dtype),
+        "c_proj": init_linear(ks[3], d, s.n_groups * s.d_state, dtype),
+        "dt_proj": init_linear(ks[4], d, nh, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[5], (conv_ch, s.d_conv), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)).astype(dtype),
+        "ssm_d": jnp.ones((nh,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype),  # inv softplus
+        "mamba_norm": jnp.zeros((di,), dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  xbc: [B, T, CH], w: [CH, K].
+
+    Returns (out [B, T, CH], new_tail [B, K-1, CH]).
+    """
+    k = w.shape[1]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    # Keep compute in the activation dtype regardless of cache storage
+    # dtype (a f32 cache must not promote the whole block to f32).
+    full = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1], :] * w[None, None, :, k - 1 - i]
+              for i in range(k))
+    new_tail = full[:, -(k - 1):, :] if k > 1 else tail
+    return jax.nn.silu(out + b), new_tail
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, bmat: jax.Array, cmat: jax.Array,
+                chunk: int, h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan in chunked matrix form.
+
+    x:    [B, T, H, P]   (dt already folded in: x * dt)
+    a:    [B, T, H]      (log-decay per step: A * dt, negative)
+    bmat: [B, T, H, N], cmat: [B, T, H, N]  (already group-expanded)
+    Returns (y [B, T, H, P], final_state [B, H, P, N]).
+    """
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, t)
+    while t % l:
+        l //= 2
+    nc = t // l
+    xr = x.reshape(b, nc, l, h, p)
+    br = bmat.reshape(b, nc, l, h, n)
+    cr = cmat.reshape(b, nc, l, h, n)
+    ar = a.reshape(b, nc, l, h).transpose(0, 3, 1, 2)    # [B, H, C, L]
+    cs = jnp.cumsum(ar, axis=-1)
+
+    # Intra-chunk (quadratic, MXU-friendly).
+    diff = cs[..., :, None] - cs[..., None, :]           # [B,H,C,L,L]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    lmat = jnp.where(mask, jnp.exp(diff), 0.0).astype(x.dtype)
+    scores = jnp.einsum("bclhn,bcshn->bhcls", cr, br) * lmat
+    y_diag = jnp.einsum("bhcls,bcshp->bclhp", scores, xr)
+
+    # Per-chunk boundary states.
+    decay_states = jnp.exp(cs[..., -1:] - cs).astype(x.dtype)   # [B,H,C,L]
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", br, decay_states, xr)
+    chunk_decay = jnp.exp(cs[..., -1]).astype(x.dtype)          # [B,H,C]
+    decay_out = jnp.exp(cs).astype(x.dtype)                     # [B,H,C,L]
+
+    def step(carry, inp):
+        st, cd, c_c, dout = inp
+        y_off = jnp.einsum("blhn,bhpn->blhp", c_c, carry) \
+            * dout.transpose(0, 2, 1)[..., None]
+        new = cd[..., None, None] * carry + st
+        return new, y_off
+
+    h_init = (jnp.zeros((b, h, p, n), x.dtype) if h0 is None
+              else h0.astype(x.dtype))
+    xs = (states.transpose(1, 0, 2, 3, 4),               # [C,B,H,P,N]
+          chunk_decay.transpose(2, 0, 1),                # [C,B,H]
+          cr.transpose(1, 0, 2, 3, 4),                   # [C,B,L,H,N]
+          decay_out.transpose(2, 0, 1, 3))               # [C,B,H,L]
+    final, y_off = jax.lax.scan(step, h_init, xs)
+    y = y_diag + y_off.transpose(1, 0, 2, 3, 4)
+    return y.reshape(b, t, h, p), final
+
+
+def ssd_recurrent_step(x, a, bmat, cmat, h):
+    """One decode step.  x: [B,1,H,P], a: [B,1,H], b/c: [B,1,H,N].
+
+    The recurrent state stays in fp32 (it integrates over the whole
+    sequence); the output is cast back to the activation dtype.
+    """
+    decay = jnp.exp(a[:, 0].astype(jnp.float32))         # [B,H]
+    h32 = h.astype(jnp.float32)
+    upd = jnp.einsum("bhp,bhn->bhpn", x[:, 0].astype(jnp.float32),
+                     bmat[:, 0].astype(jnp.float32))
+    h_new = decay[..., None, None] * h32 + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h_new,
+                   cmat[:, 0].astype(jnp.float32))
+    return y[:, None].astype(x.dtype), h_new
+
+
+def mamba_forward(params: dict, x: jax.Array, *, cfg: ModelConfig,
+                  cache: dict | None, shd=None) -> tuple[jax.Array, dict | None]:
+    """x: [B, T, D] -> (out [B, T, D], new_cache)."""
+    s, di, nh, conv_ch = _dims(cfg)
+    b, t, d = x.shape
+    p = s.head_dim
+    g, n = s.n_groups, s.d_state
+
+    z = x @ params["z_proj"]
+    xi = x @ params["x_proj"]
+    bm = x @ params["b_proj"]
+    cm = x @ params["c_proj"]
+    dt = x @ params["dt_proj"]
+    if shd is not None:
+        z = shd.act(z, "btf")
+        xi = shd.act(xi, "btf")
+
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)         # [B, T, CH]
+    conv_tail = cache["conv"] if cache is not None else None
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_tail)
+    xi, bm, cm = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,T,H]
+    a = (-jnp.exp(params["a_log"].astype(jnp.float32)))[None, None] * dt
+
+    xh = xi.reshape(b, t, nh, p) * dt[..., None].astype(xi.dtype)
+    rep = nh // g
+    bh = jnp.repeat(bm.reshape(b, t, g, n), rep, axis=2)
+    ch = jnp.repeat(cm.reshape(b, t, g, n), rep, axis=2)
+
+    h0 = cache["ssd"] if cache is not None else None
+    if t == 1 and cache is not None:
+        y, h_final = ssd_recurrent_step(xh, a, bh, ch, h0)
+    else:
+        y, h_final = ssd_chunked(xh, a, bh, ch, s.chunk, h0)
+
+    y = y + params["ssm_d"][None, None, :, None] * xi.reshape(b, t, nh, p)
+    y = y.reshape(b, t, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["mamba_norm"], cfg.norm_eps,
+                cfg.norm_fp32)
+    out = y @ params["out_proj"] if "out_proj" in params else y
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail.astype(cache["conv"].dtype),
+                     "ssd": h_final.astype(cache["ssd"].dtype)}
+    return out, new_cache
+
+
+def init_mamba_block(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    s, di, _, _ = _dims(cfg)
+    k1, k2 = jax.random.split(key)
+    p = init_mamba_params(k1, cfg, dtype)
+    p["out_proj"] = init_linear(k2, di, cfg.d_model, dtype)
+    return p
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, di, nh, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype),
+    }

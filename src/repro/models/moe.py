@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded dispatch/combine.
+
+Dispatch/combine are expressed as dense one-hot einsums (Shazeer-style) so
+the SPMD partitioner turns them into all-to-alls when the expert dimension
+is sharded over the ``model`` axis (EP).  Capacity bounds the dispatch
+buffer: tokens beyond ``capacity`` per expert are dropped (their combine
+weight is zero), which keeps the buffer shape static -- the MoE analogue
+of CapStore's fixed-size accumulator sectors.
+
+DeepSeek-style shared experts (always-on) run as a plain dense MLP in
+parallel with the routed experts.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear
+
+
+def init_moe_params(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    scale = (2.0 / (d + e.d_ff_expert)) ** 0.5
+    p = {
+        "router": init_linear(ks[0], d, e.num_experts, dtype),
+        "experts_gate": scale * jax.random.normal(
+            ks[1], (e.num_experts, d, e.d_ff_expert), dtype),
+        "experts_up": scale * jax.random.normal(
+            ks[2], (e.num_experts, d, e.d_ff_expert), dtype),
+        "experts_down": scale * jax.random.normal(
+            ks[3], (e.num_experts, e.d_ff_expert, d), dtype),
+    }
+    if e.num_shared_experts:
+        f = e.d_ff_expert * e.num_shared_experts
+        p["shared_gate_proj"] = init_linear(ks[4], d, f, dtype)
+        p["shared_up_proj"] = init_linear(ks[5], d, f, dtype)
+        p["shared_down_proj"] = init_linear(ks[6], f, d, dtype)
+    return p
+
+
+def capacity_for(tokens: int, cfg_moe) -> int:
+    cap = math.ceil(tokens * cfg_moe.top_k / cfg_moe.num_experts
+                    * cfg_moe.capacity_factor)
+    return max(8, -(-cap // 8) * 8)   # round up to 8 for TPU tiling
+
+
+def moe_forward(params: dict, x: jax.Array, *, cfg: ModelConfig,
+                shd=None) -> tuple[jax.Array, jax.Array]:
+    """x: [B, T, D] -> (out [B, T, D], aux_loss scalar).
+
+    GROUPED dispatch (Switch/MaxText formulation): tokens compete for
+    expert capacity within their batch row, so every dispatch/combine
+    tensor carries the batch dim and stays sharded over data parallelism.
+    The naive global formulation builds a [N_glob, K, E, C_glob] one-hot
+    (terabytes at 1M tokens -- see EXPERIMENTS.md Perf iteration 1); this
+    one peaks at [B, T, K, C_row].
+    """
+    e = cfg.moe
+    b, t, d = x.shape
+
+    logits = (x @ params["router"]).astype(jnp.float32)      # [B, T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    if shd is not None:
+        probs = shd.act(probs, "bte")
+    gate_vals, gate_idx = jax.lax.top_k(probs, e.top_k)      # [B, T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch-style), over all tokens.
+    me = jnp.mean(probs, axis=(0, 1))                        # [E]
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e.num_experts),
+                  axis=(0, 1))
+    aux = e.num_experts * jnp.sum(me * ce) * e.aux_loss_weight
+
+    cap = capacity_for(t, e)                                 # per row
+    onehot = jax.nn.one_hot(gate_idx, e.num_experts,
+                            dtype=jnp.int32)                 # [B, T, K, E]
+    # Buffer position of each (t, k) inside its expert, per row.
+    flat = onehot.reshape(b, t * e.top_k, e.num_experts)
+    pos_all = jnp.cumsum(flat, axis=1) * flat - 1            # [B, T*K, E]
+    pos_all = pos_all.reshape(b, t, e.top_k, e.num_experts)
+    pos_sel = jnp.take_along_axis(
+        pos_all, gate_idx[..., None], axis=-1)[..., 0]       # [B, T, K]
+    within = (pos_sel >= 0) & (pos_sel < cap)
+    sel = (onehot * within[..., None]).astype(x.dtype)       # [B, T, K, E]
+    pos_oh = jax.nn.one_hot(jnp.clip(pos_sel, 0, cap - 1), cap,
+                            dtype=x.dtype) * within[..., None]  # [B,T,K,C]
+
+    # dispatch: [B, E, C, D]; the E dim is model-sharded -> all-to-all.
+    expert_in = jnp.einsum("btke,btkc,btd->becd", sel, pos_oh, x)
+    if shd is not None:
+        expert_in = shd.act(expert_in, "becd")
+    g = jnp.einsum("becd,edf->becf", expert_in, params["experts_gate"])
+    u = jnp.einsum("becd,edf->becf", expert_in, params["experts_up"])
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("becf,efd->becd", h, params["experts_down"])
+    if shd is not None:
+        expert_out = shd.act(expert_out, "becd")
+    out = jnp.einsum("becd,btke,btkc,btk->btd", expert_out, sel, pos_oh,
+                     gate_vals.astype(x.dtype))
+
+    if e.num_shared_experts:
+        sg = jax.nn.silu(x @ params["shared_gate_proj"])
+        su = x @ params["shared_up_proj"]
+        out = out + (sg * su) @ params["shared_down_proj"]
+    return out, aux

@@ -1,0 +1,329 @@
+"""Block-pattern transformer stack: init / train forward / prefill / decode.
+
+The stack is ``prefix + scan(pattern) * repeats + suffix``.  Scanning the
+repeating pattern keeps the HLO compact for 28..48-layer models (one
+while-loop regardless of depth), which is what makes the 512-device AOT
+dry-run tractable.  ``shared_attn`` slots (Zamba-2) read their weights from
+an unscanned ``shared`` branch, so the weights are truly shared while each
+occurrence keeps its own KV cache slice.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed_tokens, gated_mlp, init_linear,
+                                 lm_head, rmsnorm)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Per-block init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelConfig, dtype, use_moe: bool) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p: Params = {"input_norm": jnp.zeros((cfg.d_model,), dtype),
+                 "pre_mlp_norm": jnp.zeros((cfg.d_model,), dtype)}
+    p.update(attn.init_attn_params(k1, cfg, dtype))
+    if use_moe:
+        p.update(moe_mod.init_moe_params(k2, cfg, dtype))
+    else:
+        p["gate_proj"] = init_linear(k2, cfg.d_model, cfg.d_ff, dtype)
+        p["up_proj"] = init_linear(k3, cfg.d_model, cfg.d_ff, dtype)
+        p["down_proj"] = init_linear(k4, cfg.d_ff, cfg.d_model, dtype)
+    if cfg.use_post_norms:
+        p["post_attn_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["post_mlp_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype,
+                in_prefix: bool = False) -> Params:
+    if kind == "mamba":
+        p = mb.init_mamba_block(key, cfg, dtype)
+        p["input_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        return p
+    if kind == "shared_attn":
+        return {}                      # weights live in params["shared"]
+    use_moe = cfg.moe is not None and (cfg.moe_in_prefix or not in_prefix)
+    return _init_attn_block(key, cfg, dtype, use_moe)
+
+
+def init_model(key: jax.Array, cfg: ModelConfig,
+               dtype=jnp.float32) -> Params:
+    cfg.validate()
+    keys = iter(jax.random.split(key, 8 + cfg.num_layers + len(cfg.pattern)))
+    params: Params = {
+        "embed": (1.0 / cfg.d_model ** 0.5) * jax.random.normal(
+            next(keys), (cfg.padded_vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_linear(next(keys), cfg.d_model,
+                                        cfg.padded_vocab_size, dtype)
+    if cfg.frontend == "audio_frames":
+        params["frontend_proj"] = init_linear(next(keys), cfg.frontend_dim,
+                                              cfg.d_model, dtype)
+    params["prefix"] = [
+        _init_block(next(keys), kind, cfg, dtype, in_prefix=True)
+        for kind in cfg.prefix]
+    params["suffix"] = [
+        _init_block(next(keys), kind, cfg, dtype) for kind in cfg.suffix]
+    if "shared_attn" in cfg.pattern or "shared_attn" in cfg.prefix \
+            or "shared_attn" in cfg.suffix:
+        params["shared"] = _init_attn_block(next(keys), cfg, dtype,
+                                            use_moe=False)
+    # Stacked pattern blocks: slot s{i} -> [repeats, ...] leaves.
+    blocks: Params = {}
+    for i, kind in enumerate(cfg.pattern):
+        per_repeat = [_init_block(next(keys), kind, cfg, dtype)
+                      for _ in range(cfg.repeats)]
+        blocks[f"s{i}"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_repeat) if per_repeat[0] else {}
+    params["blocks"] = blocks
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                 dtype) -> dict | None:
+    if kind == "mamba":
+        return mb.init_mamba_cache(cfg, batch, jnp.float32)
+    if kind in ("global", "local", "shared_attn"):
+        return attn.init_cache(cfg, batch, max_len, dtype)
+    return None
+
+
+def init_model_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> dict:
+    cache: dict = {"prefix": [], "suffix": [], "blocks": {}}
+    for kind in cfg.prefix:
+        cache["prefix"].append(_block_cache(kind, cfg, batch, max_len, dtype))
+    for kind in cfg.suffix:
+        cache["suffix"].append(_block_cache(kind, cfg, batch, max_len, dtype))
+    for i, kind in enumerate(cfg.pattern):
+        one = _block_cache(kind, cfg, batch, max_len, dtype)
+        cache["blocks"][f"s{i}"] = (
+            None if one is None else jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.repeats,) + x.shape).copy(), one))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(p: Params, kind: str, x, positions, *, cfg: ModelConfig,
+                 cache, cache_index, shd, shared: Params | None,
+                 in_prefix: bool = False):
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h = rmsnorm(x, p["input_norm"], cfg.norm_eps, cfg.norm_fp32)
+        out, new_cache = mb.mamba_forward(p, h, cfg=cfg, cache=cache, shd=shd)
+        x = x + out
+        if shd is not None:
+            x = shd.act(x, "btd")
+        return x, new_cache, aux
+
+    blk = shared if kind == "shared_attn" else p
+    window = cfg.sliding_window if kind == "local" else None
+    manual = cfg.manual_tp and cache is None and shd is not None
+    h = rmsnorm(x, blk["input_norm"], cfg.norm_eps, cfg.norm_fp32)
+    if manual:
+        from repro.models.layers import ag_seq
+        h = ag_seq(h, shd)      # SP -> TP transition (explicit all-gather)
+    if cfg.mla:
+        a_out, new_cache = attn.mla_forward(
+            blk, h, positions, cfg=cfg, cache=cache,
+            cache_index=cache_index, shd=shd)
+    else:
+        a_out, new_cache = attn.gqa_forward(
+            blk, h, positions, cfg=cfg, window=window, cache=cache,
+            cache_index=cache_index, shd=shd)
+    if shd is not None:
+        # Pin the TP reduction of the o_proj output HERE, on the bf16
+        # tensor -- otherwise the partitioner rides the all-reduce on the
+        # f32 side of the next norm's stats cast (2x wire bytes).
+        a_out = shd.act(a_out, "btd")
+    if cfg.use_post_norms:
+        a_out = rmsnorm(a_out, blk["post_attn_norm"], cfg.norm_eps, cfg.norm_fp32)
+    x = x + a_out
+    if shd is not None:
+        x = shd.act(x, "btd")
+
+    h = rmsnorm(x, blk["pre_mlp_norm"], cfg.norm_eps, cfg.norm_fp32)
+    use_moe = (cfg.moe is not None and kind != "shared_attn"
+               and (cfg.moe_in_prefix or not in_prefix))
+    if use_moe:
+        m_out, aux = moe_mod.moe_forward(blk, h, cfg=cfg, shd=shd)
+    else:
+        if manual:
+            from repro.models.layers import ag_seq
+            h = ag_seq(h, shd)
+        m_out = gated_mlp(h, blk["gate_proj"], blk["up_proj"],
+                          blk["down_proj"], cfg.mlp_act, shd=shd,
+                          manual_tp=manual)
+    if shd is not None:
+        m_out = shd.act(m_out, "btd")   # pin the down_proj TP reduction
+    if cfg.use_post_norms:
+        m_out = rmsnorm(m_out, blk["post_mlp_norm"], cfg.norm_eps, cfg.norm_fp32)
+    x = x + m_out
+    if shd is not None:
+        x = shd.act(x, "btd")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, inputs: jax.Array, *, cfg: ModelConfig,
+            shd=None, cache: dict | None = None,
+            cache_index: jax.Array | None = None
+            ) -> tuple[jax.Array, dict | None, jax.Array]:
+    """inputs: int tokens [B, T] or frontend frames [B, T, F].
+
+    Returns (logits [B, T, V], new_cache, aux_loss).
+    """
+    if cfg.frontend == "audio_frames":
+        x = inputs @ params["frontend_proj"]
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = embed_tokens(params["embed"], inputs, cfg.scale_embeddings,
+                         cfg.d_model)
+    if shd is not None:
+        x = shd.act(x, "btd")
+    b, t = x.shape[:2]
+    if cache_index is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    else:
+        positions = attn.query_positions(cache_index, b, t)
+    aux_total = jnp.zeros((), jnp.float32)
+    shared = params.get("shared")
+
+    new_cache: dict = {"prefix": [], "suffix": [], "blocks": {}}
+    for i, kind in enumerate(cfg.prefix):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = _apply_block(params["prefix"][i], kind, x, positions,
+                                  cfg=cfg, cache=c, cache_index=cache_index,
+                                  shd=shd, shared=shared, in_prefix=True)
+        new_cache["prefix"].append(nc)
+        aux_total += aux
+
+    # Scanned pattern stack.
+    if cfg.repeats > 0 and cfg.pattern:
+        block_caches = (cache["blocks"] if cache is not None else
+                        {f"s{i}": None for i in range(len(cfg.pattern))})
+
+        def body(carry, xs):
+            xx, aux_sum = carry
+            slot_params, slot_caches = xs
+            out_caches = {}
+            for i, kind in enumerate(cfg.pattern):
+                xx, nc, aux = _apply_block(
+                    slot_params[f"s{i}"], kind, xx, positions, cfg=cfg,
+                    cache=slot_caches[f"s{i}"], cache_index=cache_index,
+                    shd=shd, shared=shared)
+                out_caches[f"s{i}"] = nc
+            return (xx, aux_sum + aux), out_caches
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        (x, aux_total), scanned_caches = jax.lax.scan(
+            body, (x, aux_total), (params["blocks"], block_caches))
+        new_cache["blocks"] = scanned_caches if cache is not None else {}
+
+    for i, kind in enumerate(cfg.suffix):
+        c = cache["suffix"][i] if cache is not None else None
+        x, nc, aux = _apply_block(params["suffix"][i], kind, x, positions,
+                                  cfg=cfg, cache=c, cache_index=cache_index,
+                                  shd=shd, shared=shared)
+        new_cache["suffix"].append(nc)
+        aux_total += aux
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps, cfg.norm_fp32)
+    logits = lm_head(x, params["unembed"] if not cfg.tie_embeddings
+                     else params["embed"], cfg.tie_embeddings,
+                     cfg.final_logit_softcap, cfg.logits_fp32,
+                     valid_vocab=cfg.vocab_size)
+    if shd is not None:
+        logits = shd.act(logits, "logits")
+    return logits, (new_cache if cache is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Memory-lean CE: logsumexp - target logit (no full log_softmax)."""
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None],
+                              axis=-1)[..., 0].astype(jnp.float32)
+    nll = lse - tgt
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            shd=None) -> tuple[jax.Array, dict]:
+    logits, _, aux = forward(params, batch["inputs"], cfg=cfg, shd=shd)
+    ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            max_len: int, shd=None, cache_dtype=jnp.bfloat16):
+    """Run the prompt through the model, returning (logits, cache)."""
+    cache = init_model_cache(cfg, tokens.shape[0], max_len, cache_dtype)
+    logits, cache, _ = forward(params, tokens, cfg=cfg, shd=shd, cache=cache,
+                               cache_index=jnp.asarray(0, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params: Params, cache: dict, token: jax.Array,
+                index: jax.Array, cfg: ModelConfig, shd=None):
+    """One autoregressive step.  token: [B, 1] -> (logits [B, 1, V], cache)."""
+    logits, cache, _ = forward(params, token, cfg=cfg, shd=shd, cache=cache,
+                               cache_index=index)
+    return logits, cache
+
+
+def greedy_generate(params: Params, prompt: jax.Array, steps: int,
+                    cfg: ModelConfig, max_len: int | None = None):
+    """Reference sampler for tests/examples (greedy)."""
+    b, t = prompt.shape
+    max_len = max_len or (t + steps)
+    logits, cache = prefill(params, prompt, cfg, max_len)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    out = [tok]
+    idx = jnp.asarray(t, jnp.int32)
+    for _ in range(steps - 1):
+        logits, cache = decode_step(params, cache, tok, idx, cfg)
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        out.append(tok)
+        idx = idx + 1
+    return jnp.concatenate(out, axis=1)

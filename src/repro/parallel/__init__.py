@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (  # noqa: F401
+    MeshRules,
+    ShardingCtx,
+    make_rules,
+    param_pspecs,
+)

@@ -1,0 +1,271 @@
+"""Logical sharding rules -> PartitionSpecs for params, activations, caches.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  ``pod`` composes with ``data`` for pure data parallelism, so the
+slow inter-pod links carry exactly one gradient all-reduce per step.
+
+Parallelism schemes expressed here:
+  * TP (Megatron): attention heads / d_ff / experts / vocab over ``model``;
+  * SP (sequence parallelism): the residual stream between blocks is
+    sharded over ``model`` on the *sequence* dim (``sp=True``), which is
+    what lets 4k x 256 training activations fit HBM;
+  * EP: MoE expert dim over ``model``;
+  * KV cache: ``kv_mode="heads"`` shards the cache over KV heads (dense
+    decode) or ``kv_mode="seq"`` over the sequence dim (flash-decoding
+    style -- required for batch=1 long-context).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    dp: tuple[str, ...]            # data-parallel axes (("pod","data") or ("data",))
+    tp: str = "model"
+    sp: bool = True                # sequence-parallel residual stream
+    kv_mode: str = "heads"         # "heads" | "seq"
+
+    # ---- activation specs -------------------------------------------------
+    def act(self, kind: str) -> P:
+        dp, tp = P(self.dp), self.tp
+        seq = tp if self.sp else None
+        table = {
+            "tokens": P(self.dp, None),                  # [B, T]
+            "btd": P(self.dp, seq, None),                # residual stream
+            "btf": P(self.dp, None, tp),                 # MLP hidden
+            "bthd": P(self.dp, None, tp, None),          # per-head acts
+            "btkd": P(self.dp, None, tp, None),          # per-kv-head acts
+            "logits": P(self.dp, None, tp),              # vocab-sharded
+            "bte": P(self.dp, None, None),               # router probs
+            "ecd": P(tp, None, None),                    # expert dispatch buf
+            "becd": P(self.dp, tp, None, None),          # grouped dispatch
+            "frames": P(self.dp, None, None),            # frontend stub embeds
+        }
+        return table[kind]
+
+    def kv_cache(self, stacked: bool = True) -> P:
+        # cache leaf: [B, S, KvH, Dh] (+ leading layer-stack dim if stacked)
+        # NOTE: prefer ``cache_leaf_pspec`` (divisibility-aware); this is
+        # the static preference only.
+        if self.kv_mode == "seq":
+            base = (self.dp, self.tp, None, None)
+        else:
+            base = (self.dp, None, self.tp, None)
+        return P(*(((None,) + base) if stacked else base))
+
+    def ssm_cache(self, stacked: bool = True) -> P:
+        # conv state [B, d_conv-1, CH]; ssd state [B, H, dh, N] -> shard H/CH.
+        base = (self.dp, None, self.tp)
+        return P(*(((None,) + base) if stacked else base))
+
+
+def cache_leaf_pspec(path, shape, rules: MeshRules, mesh: Mesh) -> P:
+    """Divisibility-aware PartitionSpec for one KV/SSM cache leaf.
+
+    Preference order per leaf kind; an axis is only assigned when the dim
+    divides evenly and the axis is not already used.  A batch=1 long-context
+    cache falls back to sharding the sequence dim over ALL axes (the
+    flash-decoding layout).
+    """
+    names = [str(getattr(p, "key", "")) for p in path]
+    leaf = names[-1] if names else ""
+    stacked = "blocks" in names
+    dp, tp = rules.dp, rules.tp
+
+    def size(axes) -> int:
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    base_ndim = len(shape) - (1 if stacked else 0)
+    dims = shape[1:] if stacked else shape
+    all_axes = dp + (tp,)
+    if leaf in ("k", "v"):                       # [B, S, KvH, Dh]
+        prefs = ([(0, dp), (1, (tp,))] if rules.kv_mode == "seq"
+                 else [(0, dp), (2, (tp,)), (1, (tp,))])
+        seq_dim = 1
+    elif leaf in ("c_kv", "k_rope"):             # [B, S, R]
+        prefs = ([(0, dp), (1, (tp,))] if rules.kv_mode == "seq"
+                 else [(0, dp), (2, (tp,)), (1, (tp,))])
+        seq_dim = 1
+    elif leaf == "conv":                         # [B, K-1, CH]
+        prefs = [(0, dp), (2, (tp,))]
+        seq_dim = None
+    elif leaf == "ssd":                          # [B, H, P, N]
+        prefs = [(0, dp), (1, (tp,)), (2, (tp,))]
+        seq_dim = None
+    else:
+        return P()
+
+    assign: list = [None] * base_ndim
+    used: set = set()
+    for dim, axes in prefs:
+        if axes is None or dim >= base_ndim or assign[dim] is not None:
+            continue
+        axes = tuple(axes)
+        if any(a in used for a in axes):
+            continue
+        if dims[dim] % size(axes) == 0 and dims[dim] >= size(axes):
+            assign[dim] = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+    # batch=1 fallback: spread the sequence over every unused axis.
+    if seq_dim is not None and assign[seq_dim] is None:
+        free = tuple(a for a in all_axes if a not in used)
+        if free and dims[seq_dim] % size(free) == 0:
+            assign[seq_dim] = free
+            used.update(free)
+    if stacked:
+        assign = [None] + assign
+    return P(*assign)
+
+
+def cache_shardings(cache_specs, rules: MeshRules, mesh: Mesh):
+    """NamedSharding tree for a model cache (specs or arrays)."""
+    def mk(path, leaf):
+        return NamedSharding(mesh, cache_leaf_pspec(path, leaf.shape, rules,
+                                                    mesh))
+    return jax.tree_util.tree_map_with_path(mk, cache_specs)
+
+
+def make_rules(multi_pod: bool = False, sp: bool = True,
+               kv_mode: str = "heads") -> MeshRules:
+    return MeshRules(dp=("pod", "data") if multi_pod else ("data",),
+                     sp=sp, kv_mode=kv_mode)
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Carried through the model; no-op when mesh is None (CPU tests)."""
+
+    mesh: Mesh | None = None
+    rules: MeshRules | None = None
+
+    def _axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def act(self, x: jax.Array, kind: str) -> jax.Array:
+        if self.mesh is None or self.rules is None:
+            return x
+        spec = tuple(self.rules.act(kind))
+        if len(spec) < x.ndim:
+            spec = spec + (None,) * (x.ndim - len(spec))
+        spec = spec[:x.ndim]
+        # Drop axes that do not divide the dim: constraining e.g. 8 KV heads
+        # over a 16-way model axis forces XLA into replicate+pad (the SPMD
+        # "involuntary full rematerialization" path).
+        fixed = tuple(a if x.shape[i] % self._axis_size(a) == 0 else None
+                      for i, a in enumerate(spec))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs by path-name rules
+# ---------------------------------------------------------------------------
+
+# (regex on the '/'-joined param path) -> spec builder taking ndim.
+# Specs are written for the UNSTACKED parameter; scanned blocks get a
+# leading layer dim which we prepend as None (detected from ndim).
+_PARAM_RULES: list[tuple[str, tuple[Any, ...]]] = [
+    (r"embed$",              ("model", None)),        # [V, D] vocab-sharded
+    (r"unembed$",            (None, "model")),        # [D, V]
+    (r"(q_proj|k_proj|v_proj)$", (None, "model")),    # [D, H*dh]
+    (r"o_proj$",             ("model", None)),        # [H*dh, D]
+    (r"kv_down$",            (None, None)),           # [D, lora+rope] small
+    (r"kv_up$",              (None, "model")),        # [lora, H*(nope+v)]
+    (r"(gate_proj|up_proj)$", (None, "model")),       # [D, F]
+    (r"down_proj$",          ("model", None)),        # [F, D]
+    (r"router$",             (None, None)),           # [D, E]
+    (r"experts_(gate|up)$",  ("model", None, None)),  # [E, D, Fe] EP
+    (r"experts_down$",       ("model", None, None)),  # [E, Fe, D] EP
+    (r"shared_(gate|up)_proj$", (None, "model")),
+    (r"shared_down_proj$",   ("model", None)),
+    (r"(z_proj|x_proj)$",    (None, "model")),        # mamba [D, di]
+    (r"(b_proj|c_proj)$",    (None, "model")),        # [D, G*N]
+    (r"dt_proj$",            (None, "model")),        # [D, nH]
+    (r"conv_w$",             ("model", None)),        # [CH, d_conv]
+    (r"conv_b$",             ("model",)),
+    (r"(a_log|ssm_d|dt_bias)$", ("model",)),          # per-head [nH]
+    (r"(frontend_proj)$",    (None, None)),
+    (r".*norm.*",            None),                   # replicated
+    (r"(conv1_w|pc_w|cc_w|dec_w\d|conv1_b|pc_b|dec_b\d)$", None),  # capsnet
+]
+
+
+def _spec_for_path(path: str, ndim: int) -> P:
+    for pattern, axes in _PARAM_RULES:
+        if re.search(pattern, path):
+            if axes is None:
+                return P()
+            axes = tuple(axes)
+            if len(axes) < ndim:   # scanned stack: leading layer dim(s)
+                axes = (None,) * (ndim - len(axes)) + axes
+            elif len(axes) > ndim:
+                axes = axes[-ndim:]
+            return P(*axes)
+    return P()                     # default: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspecs(params: Any) -> Any:
+    """Tree of PartitionSpecs matching a parameter pytree (or its shapes)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_spec_for_path(_path_str(path), leaf.ndim) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_pspecs(params: Any, mesh: Mesh, dp_axes: tuple[str, ...]) -> Any:
+    """ZeRO-1: optimizer-state specs = param spec + dp sharding on the
+    largest dim that is still unsharded and divisible by the dp size."""
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    def shard_one(path, leaf):
+        spec = _spec_for_path(_path_str(path), leaf.ndim)
+        axes = list(spec) + [None] * (leaf.ndim - len(spec))
+        # pick the largest unsharded, divisible dim
+        cand = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        for i in cand:
+            if axes[i] is None and leaf.shape[i] % dp_size == 0 \
+                    and leaf.shape[i] >= dp_size:
+                axes[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+        return P(*axes)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [shard_one(p, l) for p, l in flat])

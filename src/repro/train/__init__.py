@@ -1,0 +1,4 @@
+from repro.train.checkpoint import AsyncCheckpointer, restore, save  # noqa: F401
+from repro.train.data import DataConfig, DataIterator  # noqa: F401
+from repro.train.loop import LoopConfig, TrainLoop  # noqa: F401
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state  # noqa: F401

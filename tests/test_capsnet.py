@@ -1,0 +1,127 @@
+"""CapsuleNet (the paper's model) behaviour tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import capsnet
+from repro.train.data import DataConfig, mnist_batch
+
+CFG = capsnet.CapsNetConfig()
+SMOKE = capsnet.CapsNetConfig(image_hw=14, conv1_channels=16,
+                              conv1_kernel=5, pc_kernel=3,
+                              num_primary_groups=4, primary_dim=4,
+                              class_dim=8, decoder_hidden=(32, 64))
+KEY = jax.random.PRNGKey(0)
+
+
+def test_shapes_match_sabour():
+    assert CFG.conv1_out == 20
+    assert CFG.pc_out == 6
+    assert CFG.num_primary == 1152
+    assert CFG.pc_channels == 256
+
+
+def test_forward_shapes():
+    params = capsnet.init_params(KEY, SMOKE)
+    imgs = jax.random.uniform(KEY, (3, 14, 14, 1))
+    out = capsnet.forward(params, imgs, SMOKE)
+    assert out["class_caps"].shape == (3, 10, 8)
+    assert out["lengths"].shape == (3, 10)
+    assert out["reconstruction"].shape == (3, 14 * 14)
+    assert np.isfinite(np.asarray(out["lengths"])).all()
+
+
+def test_squash_properties():
+    x = jax.random.normal(KEY, (32, 16)) * 10
+    v = capsnet.squash(x)
+    norms = np.linalg.norm(np.asarray(v), axis=-1)
+    assert (norms < 1.0 + 1e-5).all()
+    # direction preserved
+    cos = np.sum(np.asarray(v) * np.asarray(x), -1)
+    assert (cos > 0).all()
+
+
+@given(scale=st.floats(0.01, 50.0))
+@settings(max_examples=20, deadline=None)
+def test_squash_monotone_norm(scale):
+    x = jnp.ones((1, 8))
+    a = np.linalg.norm(np.asarray(capsnet.squash(x * scale)))
+    b = np.linalg.norm(np.asarray(capsnet.squash(x * scale * 2)))
+    assert b >= a - 1e-6
+
+
+def test_routing_coupling_sums_to_one():
+    uh = 0.1 * jax.random.normal(KEY, (2, 32, 10, 8))
+    v = capsnet.routing_by_agreement(uh, 3)
+    assert v.shape == (2, 10, 8)
+    assert np.isfinite(np.asarray(v)).all()
+
+
+def test_routing_more_iters_sharpens_agreement():
+    # With one dominant vote direction, more routing iterations should not
+    # reduce the winning capsule's length.
+    k1, k2 = jax.random.split(KEY)
+    uh = 0.01 * jax.random.normal(k1, (1, 64, 10, 8))
+    strong = jnp.zeros((1, 64, 10, 8)).at[:, :, 3, 0].set(0.5)
+    uh = uh + strong
+    v1 = capsnet.routing_by_agreement(uh, 1)
+    v3 = capsnet.routing_by_agreement(uh, 3)
+    n1 = np.linalg.norm(np.asarray(v1[0, 3]))
+    n3 = np.linalg.norm(np.asarray(v3[0, 3]))
+    assert n3 >= n1 - 1e-4
+
+
+def test_margin_loss_zero_when_perfect():
+    lengths = jnp.array([[0.95, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05,
+                          0.05, 0.05]])
+    loss = capsnet.margin_loss(lengths, jnp.array([0]))
+    assert float(loss) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_margin_loss_penalizes_wrong_class():
+    lengths = jnp.array([[0.95, 0.8, 0.05, 0.05, 0.05, 0.05, 0.05, 0.05,
+                          0.05, 0.05]])
+    loss = capsnet.margin_loss(lengths, jnp.array([0]))
+    assert float(loss) > 0.1
+
+
+def test_training_reduces_loss():
+    params = capsnet.init_params(KEY, SMOKE)
+    dc = DataConfig(kind="mnist", global_batch=16)
+    losses, accs = [], []
+    for step in range(80):
+        b = mnist_batch(dc, step, image_hw=14)
+        params, m = capsnet.train_step(params, b["images"], b["labels"],
+                                       SMOKE, lr=3e-2)
+        losses.append(float(m["loss"]))
+        accs.append(float(m["accuracy"]))
+    assert np.isfinite(losses).all()
+    # plain-SGD margin loss falls slowly but monotonically on average
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.01
+    assert np.mean(accs[-10:]) > 0.15      # well above 10% chance
+
+
+def test_pallas_capsnet_head_equivalence():
+    """core.capsnet votes+routing == kernels (caps_votes + fused routing)."""
+    from repro.kernels import ops
+    cfg = SMOKE
+    params = capsnet.init_params(KEY, cfg)
+    u = capsnet.squash(jax.random.normal(KEY, (2, cfg.num_primary,
+                                               cfg.primary_dim)))
+    want_votes = capsnet.compute_votes(u, params["cc_w"])
+    w = params["cc_w"].transpose(0, 1, 2, 3).reshape(
+        cfg.num_primary, cfg.num_classes * cfg.class_dim, cfg.primary_dim)
+    got_votes = ops.caps_votes(u, w, block_i=16)
+    np.testing.assert_allclose(
+        np.asarray(got_votes),
+        np.asarray(want_votes.reshape(2, cfg.num_primary, -1)),
+        rtol=1e-5, atol=1e-5)
+    want_v = capsnet.routing_by_agreement(want_votes, cfg.routing_iters)
+    got_v = ops.routing(got_votes, iters=cfg.routing_iters,
+                        num_classes=cfg.num_classes)
+    np.testing.assert_allclose(np.asarray(got_v),
+                               np.asarray(want_v.reshape(2, -1)),
+                               rtol=1e-5, atol=1e-5)

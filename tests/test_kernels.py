@@ -1,0 +1,166 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, dtype=jnp.float32, k=KEY, scale=1.0):
+    return (scale * jax.random.normal(k, shape)).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# caps_votes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,i,c,n", [(1, 64, 8, 160), (2, 256, 8, 160),
+                                     (3, 128, 16, 80), (1, 1152, 8, 160)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_caps_votes(b, i, c, n, dtype):
+    u = rand((b, i, c), dtype)
+    w = rand((i, n, c), dtype)
+    got = ops.caps_votes(u, w)
+    want = ref.caps_votes(u.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               rtol=TOL[dtype], atol=TOL[dtype] * 8)
+
+
+def test_caps_votes_block_sweep():
+    u = rand((2, 256, 8))
+    w = rand((256, 160, 8))
+    want = ref.caps_votes(u, w)
+    for bi in (32, 64, 128, 256):
+        got = ops.caps_votes(u, w, block_i=bi)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# routing (fused) -- the paper's on-chip-resident loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("iters", [1, 2, 3, 5])
+@pytest.mark.parametrize("b,i,j,d", [(1, 64, 10, 16), (2, 1152, 10, 16),
+                                     (3, 96, 4, 8)])
+def test_routing_fused(iters, b, i, j, d):
+    uh = 0.1 * rand((b, i, j * d))
+    got = ops.routing(uh, iters=iters, num_classes=j)
+    want = ref.routing(uh.reshape(b, i, j, d), iters).reshape(b, j * d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_routing_matches_capsnet_module():
+    from repro.core.capsnet import routing_by_agreement
+    uh = 0.1 * rand((2, 128, 160))
+    got = ops.routing(uh, iters=3, num_classes=10)
+    want = routing_by_agreement(uh.reshape(2, 128, 10, 16), 3)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want.reshape(2, 160)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# squash / rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 16), (4, 100, 16), (1, 1152, 8),
+                                   (2, 3, 5, 8)])
+def test_squash(shape):
+    x = rand(shape)
+    np.testing.assert_allclose(np.asarray(ops.squash(x)),
+                               np.asarray(ref.squash(x)), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_squash_norm_bound():
+    x = 100.0 * rand((16, 32))
+    v = ops.squash(x)
+    norms = np.linalg.norm(np.asarray(v), axis=-1)
+    assert (norms <= 1.0 + 1e-5).all()
+
+
+@pytest.mark.parametrize("rows,d", [(8, 64), (1024, 512), (7, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(rows, d, dtype):
+    x = rand((rows, d), dtype)
+    w = rand((d,), scale=0.1)
+    got = ops.rmsnorm(x, w)
+    want = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tq,tk,win,cap,causal", [
+    (128, 128, None, None, True),
+    (256, 256, 64, None, True),
+    (128, 128, None, 50.0, True),
+    (1, 256, None, None, True),          # decode
+    (8, 264, 32, 30.0, True),            # non-pow2 kv + window + softcap
+    (64, 64, None, None, False),         # bidirectional
+    (96, 96, 16, None, True),
+])
+def test_flash_attention(tq, tk, win, cap, causal):
+    ks = jax.random.split(KEY, 3)
+    q = rand((2, 4, tq, 64), k=ks[0])
+    k = rand((2, 4, tk, 64), k=ks[1])
+    v = rand((2, 4, tk, 64), k=ks[2])
+    got = ops.flash_attention(q, k, v, causal=causal, window=win,
+                              softcap=cap)
+    want = ref.attention(q, k, v, causal=causal, window=win, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("d", [64, 128, 256])
+def test_flash_attention_head_dims(d):
+    ks = jax.random.split(KEY, 3)
+    q = rand((1, 2, 128, d), k=ks[0])
+    k = rand((1, 2, 128, d), k=ks[1])
+    v = rand((1, 2, 128, d), k=ks[2])
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_sweep():
+    ks = jax.random.split(KEY, 3)
+    q, k, v = (rand((1, 2, 256, 64), k=kk) for kk in ks)
+    want = ref.attention(q, k, v, causal=True)
+    for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        got = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_vs_model_attention():
+    """Flash kernel == the model's grouped_attention on expanded heads."""
+    from repro.models.attention import grouped_attention
+    ks = jax.random.split(KEY, 3)
+    b, h, t, d = 2, 4, 64, 32
+    q = rand((b, t, h, d), k=ks[0])
+    k = rand((b, t, h, d), k=ks[1])
+    v = rand((b, t, h, d), k=ks[2])
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    want = grouped_attention(q, k, v, pos, pos, causal=True, window=None,
+                             softcap=None, scale=d ** -0.5)
+    got = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                              k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), causal=True)
+    np.testing.assert_allclose(np.asarray(got.transpose(0, 2, 1, 3)),
+                               np.asarray(want), rtol=2e-5, atol=2e-5)

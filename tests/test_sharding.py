@@ -1,0 +1,133 @@
+"""Sharding rules + a real small-mesh integration test (8 forced host
+devices in a subprocess so the main test process keeps 1 device)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.launch.shapes import SHAPES, cell_supported, param_specs
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import (_spec_for_path, make_rules,
+                                     param_pspecs)
+import jax.numpy as jnp
+
+
+def test_param_rules_tp_layout():
+    assert _spec_for_path("embed", 2) == P("model", None)
+    assert _spec_for_path("blocks/s0/q_proj", 3) == P(None, None, "model")
+    assert _spec_for_path("blocks/s0/o_proj", 3) == P(None, "model", None)
+    assert _spec_for_path("prefix/0/down_proj", 2) == P("model", None)
+    assert _spec_for_path("blocks/s0/experts_gate", 4) == P(
+        None, "model", None, None)
+    assert _spec_for_path("blocks/s0/input_norm", 2) == P()
+    assert _spec_for_path("shared/kv_down", 2) == P(None, None)
+
+
+def test_param_pspecs_cover_all_leaves():
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    specs = param_specs(cfg, jnp.float32)
+    ps = param_pspecs(specs)
+    flat_p = jax.tree_util.tree_leaves(specs)
+    flat_s = jax.tree_util.tree_leaves(
+        ps, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+
+
+def test_rules_sp_toggle():
+    r_sp = make_rules(sp=True)
+    r_nosp = make_rules(sp=False)
+    assert r_sp.act("btd")[1] == "model"
+    assert r_nosp.act("btd")[1] is None
+
+
+def test_skip_policy():
+    expect_long = {"gemma2-9b": True, "gemma3-12b": True,
+                   "granite-3-2b": False, "gemma-7b": False,
+                   "mamba2-370m": True, "phi3.5-moe-42b-a6.6b": False,
+                   "deepseek-v2-lite-16b": True, "chameleon-34b": False,
+                   "zamba2-1.2b": True}
+    from repro.configs import get_config
+    for arch, want in expect_long.items():
+        cfg = get_config(arch)
+        ok, _ = cell_supported(cfg, SHAPES["long_500k"])
+        assert ok == want, arch
+    hub = get_config("hubert-xlarge")
+    assert not cell_supported(hub, SHAPES["decode_32k"])[0]
+    assert not cell_supported(hub, SHAPES["long_500k"])[0]
+    assert cell_supported(hub, SHAPES["train_4k"])[0]
+    assert cell_supported(hub, SHAPES["prefill_32k"])[0]
+
+
+def test_runnable_cell_count():
+    """40 assigned cells minus the 6 documented skips = 34 runnable."""
+    from repro.configs import LM_ARCHS, get_config
+    runnable = sum(
+        1 for a in LM_ARCHS for s in SHAPES
+        if cell_supported(get_config(a), SHAPES[s])[0])
+    assert runnable == 34
+
+
+SUBPROCESS_SRC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.launch.steps import make_train_step
+    from repro.models import init_model
+    from repro.parallel.sharding import (ShardingCtx, make_rules,
+                                         param_pspecs)
+    from repro.train.optimizer import OptConfig, init_opt_state
+
+    cfg = get_smoke_config("{arch}")
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = make_rules(False)
+    shd = ShardingCtx(mesh, rules)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    batch = {{"inputs": jnp.zeros((4, 32), jnp.int32) + 3,
+              "targets": jnp.ones((4, 32), jnp.int32)}}
+
+    # sharded step
+    pshard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params),
+        is_leaf=lambda x: isinstance(x, P))
+    params_sh = jax.device_put(params, pshard)
+    step = jax.jit(make_train_step(cfg, OptConfig(warmup_steps=0),
+                                   shd, compute_dtype=jnp.float32),
+                   in_shardings=(pshard, None, None))
+    _, _, m_sh = step(params_sh, opt, batch)
+
+    # single-device reference
+    step1 = jax.jit(make_train_step(cfg, OptConfig(warmup_steps=0),
+                                    None, compute_dtype=jnp.float32))
+    _, _, m1 = step1(params, opt, batch)
+    print(json.dumps({{"sharded": float(m_sh["loss"]),
+                       "single": float(m1["loss"])}}))
+""")
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "zamba2-1.2b",
+                                  "deepseek-v2-lite-16b"])
+def test_sharded_step_matches_single_device(arch, tmp_path):
+    """Numerical equivalence: 2x4-mesh sharded train step == 1 device."""
+    src = SUBPROCESS_SRC.format(arch=arch)
+    out = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                         text=True, timeout=900,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root",
+                              "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    np.testing.assert_allclose(res["sharded"], res["single"], rtol=2e-4)

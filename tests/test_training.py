@@ -1,0 +1,300 @@
+"""Training substrate: optimizer, data determinism, checkpoint round-trip
++ atomicity, fault-tolerant loop (NaN skip, preemption, resume), gradient
+compression numerics."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import init_model
+from repro.parallel.compress import (compress_grads_tree, ef_dequantize,
+                                     ef_quantize)
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, DataIterator, batch_for_step
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                   lr_at)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference_update():
+    params = {"w": jnp.ones((4,)), "b": jnp.zeros((2,))}
+    grads = {"w": jnp.full((4,), 0.5), "b": jnp.full((2,), -1.0)}
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=0, decay_steps=100,
+                    weight_decay=0.0, clip_norm=1e9)
+    state = init_opt_state(params)
+    new_p, new_s, m = adamw_update(params, grads, state, cfg)
+    # step 1: m_hat = g, v_hat = g^2 -> update = g/|g| = sign(g)
+    lr = float(lr_at(jnp.asarray(1), cfg))
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               1.0 - lr * np.sign(0.5), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(new_p["b"]),
+                               0.0 - lr * np.sign(-1.0), rtol=1e-4)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, decay_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_at(jnp.asarray(s), cfg)) for s in range(0, 101, 5)]
+    assert lrs[1] == pytest.approx(0.5)              # mid warmup
+    assert max(lrs) <= 1.0 + 1e-6
+    assert lrs[-1] == pytest.approx(0.1, abs=1e-3)   # floor
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((3,))}
+    grads = {"w": jnp.full((3,), 1e6)}
+    cfg = OptConfig(clip_norm=1.0, warmup_steps=0, weight_decay=0.0)
+    _, _, m = adamw_update(params, grads, init_opt_state(params), cfg)
+    assert float(m["grad_norm"]) > 1e5               # reported pre-clip
+
+
+# ---------------------------------------------------------------------------
+# Data determinism
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_per_step():
+    dc = DataConfig(kind="lm", vocab_size=97, seq_len=16, global_batch=4)
+    a = batch_for_step(dc, 7)
+    b = batch_for_step(dc, 7)
+    np.testing.assert_array_equal(np.asarray(a["inputs"]),
+                                  np.asarray(b["inputs"]))
+    c = batch_for_step(dc, 8)
+    assert not np.array_equal(np.asarray(a["inputs"]),
+                              np.asarray(c["inputs"]))
+
+
+def test_data_skip_ahead_equals_sequential():
+    dc = DataConfig(kind="lm", vocab_size=97, seq_len=8, global_batch=2)
+    it1 = DataIterator(dc)
+    for _ in range(5):
+        next(it1)
+    b5 = next(it1)
+    it2 = DataIterator(dc)
+    it2.skip_to(5)
+    np.testing.assert_array_equal(next(it2)["inputs"], b5["inputs"])
+
+
+def test_data_targets_shifted():
+    dc = DataConfig(kind="lm", vocab_size=97, seq_len=16, global_batch=2)
+    b = batch_for_step(dc, 0)
+    np.testing.assert_array_equal(np.asarray(b["inputs"][:, 1:]),
+                                  np.asarray(b["targets"][:, :-1]))
+
+
+@given(hosts=st.sampled_from([1, 2, 4]))
+@settings(max_examples=6, deadline=None)
+def test_data_host_sharding_disjoint(hosts):
+    dc = DataConfig(kind="lm", vocab_size=997, seq_len=8, global_batch=8)
+    rows = [np.asarray(batch_for_step(dc, 3, host=h, num_hosts=hosts)
+                       ["inputs"]) for h in range(hosts)]
+    assert all(r.shape[0] == 8 // hosts for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 3)
+    restored, manifest = ckpt.restore(tree, tmp_path)
+    assert manifest["step"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(restored["nested"]["b"]),
+                                  np.asarray(tree["nested"]["b"]))
+
+
+def test_checkpoint_atomicity_no_commit_marker(tmp_path):
+    tree = _tree()
+    ckpt.save(tree, tmp_path, 1)
+    # simulate a torn write: directory exists but no COMMIT marker
+    (tmp_path / "step_00000002").mkdir()
+    (tmp_path / "step_00000002" / "arrays.npz").write_bytes(b"garbage")
+    assert ckpt.latest_step(tmp_path) == 1     # torn ckpt ignored
+    restored, m = ckpt.restore(tree, tmp_path)
+    assert m["step"] == 1
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    cp = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        cp.save_async(tree, s)
+    cp.wait()
+    assert ckpt.committed_steps(tmp_path) == [3, 4]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(_tree(), tmp_path, 1)
+    bad = {"a": jnp.zeros((3, 3)), "nested": {"b": jnp.ones((4,),
+                                                            jnp.int32)}}
+    with pytest.raises(ValueError):
+        ckpt.restore(bad, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+def _loop(tmp_path, total=8, ckpt_every=4):
+    cfg = get_smoke_config("granite-3-2b")
+    dc = DataConfig(kind="lm", vocab_size=cfg.vocab_size, seq_len=16,
+                    global_batch=4)
+    lc = LoopConfig(total_steps=total, ckpt_every=ckpt_every,
+                    ckpt_dir=str(tmp_path / "ck"), log_every=1000,
+                    heartbeat_path=str(tmp_path / "hb.json"))
+    return TrainLoop(cfg, OptConfig(peak_lr=1e-3, warmup_steps=2), dc, lc)
+
+
+def test_loop_runs_and_checkpoints(tmp_path):
+    loop = _loop(tmp_path)
+    hist = loop.run()
+    assert len(hist) == 8
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert 8 in ckpt.committed_steps(tmp_path / "ck")
+    hb = json.loads((tmp_path / "hb.json").read_text())
+    assert hb["step"] == 8
+
+
+def test_loop_resume_after_kill(tmp_path):
+    loop1 = _loop(tmp_path, total=4, ckpt_every=4)
+    loop1.run()
+    # "restart the job" with a longer horizon: resumes from step 4
+    loop2 = _loop(tmp_path, total=8, ckpt_every=4)
+    hist = loop2.run(resume=True)
+    assert hist[0]["step"] == 5
+    assert loop2.step == 8
+
+
+def test_loop_resume_loss_continuity(tmp_path):
+    full = _loop(tmp_path / "x", total=8, ckpt_every=100)
+    h_full = full.run()
+    a = _loop(tmp_path / "y", total=4, ckpt_every=4)
+    a.run()
+    b = _loop(tmp_path / "y", total=8, ckpt_every=4)
+    h_b = b.run(resume=True)
+    # same data stream + same state => identical losses after resume
+    np.testing.assert_allclose(h_full[-1]["loss"], h_b[-1]["loss"],
+                               rtol=1e-4)
+
+
+def test_loop_preemption(tmp_path):
+    loop = _loop(tmp_path, total=100, ckpt_every=50)
+    orig = loop._heartbeat
+
+    def hb_and_stop(step, metrics):
+        orig(step, metrics)
+        if step >= 3:
+            loop.request_stop()
+
+    loop._heartbeat = hb_and_stop
+    loop.run()
+    assert loop.step < 100
+    assert loop.step in ckpt.committed_steps(tmp_path / "ck")  # final save
+
+
+def test_loop_straggler_hook(tmp_path):
+    seen = []
+    loop = _loop(tmp_path, total=6)
+    loop.on_straggler = lambda step, t: seen.append(step)
+    # wrap step fn with an artificial stall on step 5
+    inner = loop._step_fn
+    calls = {"n": 0}
+
+    def slow(params, opt, batch):
+        calls["n"] += 1
+        out = inner(params, opt, batch)
+        jax.block_until_ready(out[0])
+        if calls["n"] == 6:
+            import time
+            time.sleep(1.0)
+        return out
+
+    loop._step_fn = slow
+    loop.run()
+    assert seen, "straggler hook never fired"
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_ef_quantize_roundtrip_small_error():
+    g = jax.random.normal(KEY, (128,)) * 0.01
+    q, s, r = ef_quantize(g, None)
+    deq = ef_dequantize(q, s)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(g),
+                               atol=float(s) + 1e-9)
+    # residual == exact quantization error
+    np.testing.assert_allclose(np.asarray(r),
+                               np.asarray(g) - np.asarray(deq), atol=1e-9)
+
+
+def test_error_feedback_unbiased_over_time():
+    """Accumulated compressed updates converge to accumulated true grads."""
+    g = 0.003 * jnp.ones((64,))
+    res = jnp.zeros((64,))
+    total = jnp.zeros((64,))
+    for _ in range(50):
+        (cg,), (res,) = (lambda t: (t[0], t[1]))(
+            compress_grads_tree((g,), (res,)))
+        total = total + cg
+    np.testing.assert_allclose(np.asarray(total), 50 * 0.003,
+                               rtol=0.02)
+
+
+def test_compressed_psum_multidevice_semantics():
+    """compressed_psum inside shard_map == plain mean-psum (within quant
+    error), on a 1-device mesh with world=1."""
+    from repro.parallel.compress import compressed_psum
+    mesh = jax.make_mesh((1,), ("d",))
+    g = jax.random.normal(KEY, (32,)) * 0.01
+
+    def f(x):
+        out, _ = compressed_psum(x, "d", world=1)
+        return out
+
+    out = jax.shard_map(f, mesh=mesh,
+                        in_specs=jax.sharding.PartitionSpec(None),
+                        out_specs=jax.sharding.PartitionSpec(None))(g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=2e-4)
+
+
+def test_elastic_restore_onto_resharded_mesh(tmp_path):
+    """A checkpoint written by one topology restores onto another: the
+    restore path reshards every leaf via the provided shardings
+    (single-device CPU stands in for the new mesh)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "b": jnp.ones((4,))}
+    ckpt.save(tree, tmp_path, 7)
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    shardings = {"w": NamedSharding(mesh, P("model", None)),
+                 "b": NamedSharding(mesh, P())}
+    restored, manifest = ckpt.restore(tree, tmp_path, shardings=shardings)
+    assert manifest["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding.spec == P("model", None)
