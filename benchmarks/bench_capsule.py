@@ -1,0 +1,59 @@
+"""Plan-driven CapsNet execution: jnp vs Pallas forward + batched serving.
+
+Times the reference jnp forward against the ExecutionPlan-driven Pallas
+forward (interpret mode on CPU -- the comparison is about the shared plan,
+not raw speed off-TPU), prints the compiled plan, and drives the slot-based
+``CapsuleEngine`` over a request stream to report requests/s.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import capsnet
+from repro.core.capsnet import CapsNetConfig
+from repro.core.execplan import compile_plan
+from repro.serve.capsule import CapsRequest, CapsuleEngine
+
+CFG = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
+                    pc_kernel=3, num_primary_groups=4, primary_dim=4,
+                    class_dim=8, use_decoder=False)
+BATCH = 4
+REQUESTS = 16
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    params = capsnet.init_params(key, CFG)
+    imgs = jax.random.uniform(key, (BATCH, CFG.image_hw, CFG.image_hw, 1))
+    plan = compile_plan(CFG, batch=BATCH)
+
+    for r in plan.summary():
+        row(f"plan/{r['name']}", 0.0,
+            f"kernel={r['kernel']} block={r['block']} "
+            f"vmem_kib={r['vmem_kib']:.1f}")
+
+    f_jnp = jax.jit(lambda p, x: capsnet.forward(p, x, CFG)["lengths"])
+    f_pal = jax.jit(lambda p, x: capsnet.forward(p, x, CFG, backend="pallas",
+                                                 plan=plan)["lengths"])
+    want, us = timed(lambda: np.asarray(f_jnp(params, imgs)))
+    row("capsnet-forward-jnp", us, f"batch={BATCH}")
+    got, us = timed(lambda: np.asarray(f_pal(params, imgs)))
+    row("capsnet-forward-pallas", us,
+        f"maxdiff={np.abs(got - want).max():.2e}")
+
+    engine = CapsuleEngine(params, CFG, slots=BATCH, plan=plan)
+    pool = np.asarray(imgs)
+    for i in range(REQUESTS):
+        engine.submit(CapsRequest(rid=i, image=pool[i % BATCH]))
+    engine.run()
+    s = engine.stats()
+    row("capsule-serving", 1e6 * s["elapsed_s"] / max(s["requests"], 1),
+        f"req/s={s['requests_per_s']:.1f} occupancy={s['occupancy']:.2f} "
+        f"mean_lat_ms={s['mean_latency_ms']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,11 +8,13 @@ Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
 import sys
 import traceback
 
-from benchmarks import (bench_dataflow, bench_fig4, bench_fig5, bench_fig10,
-                        bench_fig11, bench_kernels, bench_paper_validation,
-                        bench_planner, bench_roofline, bench_table2)
+from benchmarks import (bench_capsule, bench_dataflow, bench_fig4,
+                        bench_fig5, bench_fig10, bench_fig11, bench_kernels,
+                        bench_paper_validation, bench_planner, bench_roofline,
+                        bench_table2)
 
 MODULES = {
+    "capsule": bench_capsule,
     "fig4": bench_fig4,
     "fig5": bench_fig5,
     "table2": bench_table2,

@@ -14,13 +14,17 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import analysis, dse  # noqa: E402
+from repro.core import dse  # noqa: E402
+from repro.core.capsnet import CapsNetConfig  # noqa: E402
+from repro.core.execplan import compile_plan  # noqa: E402
 from repro.core.planner import (CAPSNET_WORKLOADS, MatmulWorkload,  # noqa: E402
                                 arithmetic_intensity, plan_matmul)
 
 
 def main() -> None:
-    profiles = analysis.capsnet_profiles()
+    # ONE ExecutionPlan: the schedule below is what the Pallas kernels run.
+    plan = compile_plan(CapsNetConfig())
+    profiles = list(plan.profiles)
     orgs = dse.design_organizations(profiles)
 
     print("== ASIC organizations (paper Table 2) ==")

@@ -1,11 +1,14 @@
 """CapStore core: the paper's contribution.
 
-- ``capsnet``:  CapsuleNet inference/training in pure JAX.
+- ``capsnet``:  CapsuleNet inference/training in pure JAX (+ Pallas backend).
 - ``analysis``: CapsAcc dataflow model -> per-op memory/cycles/accesses (Fig 4).
 - ``energy``:   CACTI-P-flavoured SRAM/DRAM energy+area model (32 nm).
 - ``dse``:      memory-organization design space exploration (Tables 1/2).
 - ``pmu``:      application-aware power management (sector power gating).
 - ``planner``:  the TPU adaptation -- CapStore DSE over Pallas block shapes.
+- ``execplan``: ONE compiled per-operation plan (blocks + VMEM footprints +
+  PMU phases) shared by the kernels, the energy model, and serving.
 """
 
-from repro.core import analysis, capsnet, dse, energy, planner, pmu  # noqa: F401
+from repro.core import (analysis, capsnet, dse, energy, execplan,  # noqa: F401
+                        planner, pmu)

@@ -32,6 +32,10 @@ A matmul-view of each operation drives the access counts: an [M,K] x [K,N]
 product on the 16x16 array reads each weight once (weight-stationary
 streaming), re-reads each input element once per 16-wide output-column
 group, and performs one accumulator read-modify-write per 16-deep K tile.
+
+The model is parametric over the network shape (``CapsNetDims``) so an
+``ExecutionPlan`` can be compiled for any ``CapsNetConfig``; the module
+constants below are the paper's MNIST instance and remain the defaults.
 """
 
 from __future__ import annotations
@@ -55,6 +59,65 @@ PRIMARY_DIM = 8
 NUM_CLASSES = 10
 CLASS_DIM = 16
 ROUTING_ITERS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class CapsNetDims:
+    """Shape of one CapsuleNet instance, as the dataflow model sees it.
+
+    Defaults are the paper's MNIST network; ``dims_from_config`` derives an
+    instance from a ``repro.core.capsnet.CapsNetConfig``.
+    """
+
+    in_hw: int = IN_H
+    conv1_k: int = CONV1_K
+    conv1_cin: int = CONV1_CIN
+    conv1_cout: int = CONV1_COUT
+    pc_k: int = PC_K
+    pc_stride: int = PC_STRIDE
+    pc_cout: int = PC_COUT
+    num_primary_groups: int = 32
+    primary_dim: int = PRIMARY_DIM
+    num_classes: int = NUM_CLASSES
+    class_dim: int = CLASS_DIM
+    routing_iters: int = ROUTING_ITERS
+
+    @property
+    def conv1_out(self) -> int:
+        return self.in_hw - self.conv1_k + 1
+
+    @property
+    def pc_cin(self) -> int:
+        return self.conv1_cout
+
+    @property
+    def pc_out(self) -> int:
+        return (self.conv1_out - self.pc_k) // self.pc_stride + 1
+
+    @property
+    def num_primary(self) -> int:
+        return self.pc_out * self.pc_out * self.num_primary_groups
+
+
+MNIST_DIMS = CapsNetDims()
+
+
+def dims_from_config(cfg) -> CapsNetDims:
+    """Derive the dataflow dims from a ``CapsNetConfig`` (duck-typed)."""
+    return CapsNetDims(
+        in_hw=cfg.image_hw,
+        conv1_k=cfg.conv1_kernel,
+        conv1_cin=cfg.in_channels,
+        conv1_cout=cfg.conv1_channels,
+        pc_k=cfg.pc_kernel,
+        pc_stride=cfg.pc_stride,
+        pc_cout=cfg.pc_channels,
+        num_primary_groups=cfg.num_primary_groups,
+        primary_dim=cfg.primary_dim,
+        num_classes=cfg.num_classes,
+        class_dim=cfg.class_dim,
+        routing_iters=cfg.routing_iters,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,19 +185,19 @@ def _matmul_accesses(m: int, k: int, n: int) -> dict:
 # Per-operation profiles
 # ---------------------------------------------------------------------------
 
-def conv1_profile() -> OperationProfile:
-    m = CONV1_OUT * CONV1_OUT                  # 400 output positions
-    k = CONV1_K * CONV1_K * CONV1_CIN          # 81
-    n = CONV1_COUT                             # 256
+def conv1_profile(dims: CapsNetDims = MNIST_DIMS) -> OperationProfile:
+    m = dims.conv1_out * dims.conv1_out        # output positions
+    k = dims.conv1_k * dims.conv1_k * dims.conv1_cin
+    n = dims.conv1_cout
     a = _matmul_accesses(m, k, n)
-    in_elems = IN_H * IN_W * CONV1_CIN
+    in_elems = dims.in_hw * dims.in_hw * dims.conv1_cin
     w_elems = k * n
     return OperationProfile(
         name="Conv1",
         macs=a["macs"],
         cycles=a["cycles"],
         data_mem=in_elems * ACT_BYTES,                       # full (tiny) input
-        weight_mem=2 * CONV1_K * CONV1_K * CONV1_CIN * ARRAY_DIM * ACT_BYTES,
+        weight_mem=2 * k * ARRAY_DIM * ACT_BYTES,
         accum_mem=m * n * ACC_BYTES,                         # dense output @32b
         data_reads=a["data_reads"],
         data_writes=float(in_elems),
@@ -145,22 +208,21 @@ def conv1_profile() -> OperationProfile:
     )
 
 
-def primarycaps_profile() -> OperationProfile:
-    # Dense conv over the 20x20 grid; stride-2 selection on write-back.
-    m_dense = (CONV1_OUT - PC_K + 1 + (PC_STRIDE - 1)) ** 2  # positions computed
-    m = PC_OUT * PC_OUT                                       # 36 kept positions
-    k = PC_K * PC_K * PC_CIN                                  # 20736
-    n = PC_COUT
+def primarycaps_profile(dims: CapsNetDims = MNIST_DIMS) -> OperationProfile:
+    # Dense conv over the conv1 grid; strided selection on write-back.
+    m = dims.pc_out * dims.pc_out                             # kept positions
+    k = dims.pc_k * dims.pc_k * dims.pc_cin
+    n = dims.pc_cout
     a = _matmul_accesses(m, k, n)
-    in_elems = CONV1_OUT * CONV1_OUT * PC_CIN                 # 102400
-    w_elems = k * n                                           # 5.3M (streamed)
+    in_elems = dims.conv1_out * dims.conv1_out * dims.pc_cin
+    w_elems = k * n                                           # streamed
     return OperationProfile(
         name="PrimaryCaps",
         macs=a["macs"],
         cycles=a["cycles"],
         data_mem=in_elems * ACT_BYTES,                        # full input fmap
         weight_mem=2 * ARRAY_DIM * ARRAY_DIM * ACT_BYTES,     # streaming tile
-        accum_mem=CONV1_OUT * CONV1_OUT * n * ACC_BYTES,      # dense pre-stride grid
+        accum_mem=dims.conv1_out * dims.conv1_out * n * ACC_BYTES,
         data_reads=a["data_reads"],
         data_writes=float(in_elems),
         weight_reads=a["weight_reads"],
@@ -172,11 +234,11 @@ def primarycaps_profile() -> OperationProfile:
     )
 
 
-def classcaps_fc_profile() -> OperationProfile:
+def classcaps_fc_profile(dims: CapsNetDims = MNIST_DIMS) -> OperationProfile:
     # Votes u_hat[i, j, d] = sum_c W[i, j, d, c] * u[i, c]
-    m = NUM_PRIMARY                # 1152 input capsules
-    k = PRIMARY_DIM                # 8
-    n = NUM_CLASSES * CLASS_DIM    # 160 outputs per capsule
+    m = dims.num_primary                     # input capsules
+    k = dims.primary_dim
+    n = dims.num_classes * dims.class_dim    # outputs per capsule
     a = _matmul_accesses(m, k, n)
     u_elems = m * k
     w_elems = m * k * n            # weights unique per (i, j): no reuse
@@ -198,22 +260,22 @@ def classcaps_fc_profile() -> OperationProfile:
     )
 
 
-def _routing_state_mem() -> tuple[float, float]:
+def _routing_state_mem(dims: CapsNetDims) -> tuple[float, float]:
     """(accumulator-resident routing state, coupling-coefficient bytes)."""
-    votes = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM * ACT_BYTES   # u_hat @16b
-    logits = NUM_PRIMARY * NUM_CLASSES * ACC_BYTES              # b @32b
-    s = NUM_CLASSES * CLASS_DIM * ACC_BYTES
-    return votes + logits + s, NUM_PRIMARY * NUM_CLASSES * ACT_BYTES
+    votes = dims.num_primary * dims.num_classes * dims.class_dim * ACT_BYTES
+    logits = dims.num_primary * dims.num_classes * ACC_BYTES
+    s = dims.num_classes * dims.class_dim * ACC_BYTES
+    return votes + logits + s, dims.num_primary * dims.num_classes * ACT_BYTES
 
 
-def sum_squash_profile() -> OperationProfile:
+def sum_squash_profile(dims: CapsNetDims = MNIST_DIMS) -> OperationProfile:
     # s_j = sum_i c_ij * u_hat_ij ; v_j = squash(s_j); executed per iteration.
-    votes = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM
+    votes = dims.num_primary * dims.num_classes * dims.class_dim
     macs = float(votes)                       # one MAC per vote element
-    m, k = NUM_CLASSES * CLASS_DIM, NUM_PRIMARY
+    m, k = dims.num_classes * dims.class_dim, dims.num_primary
     cycles = float(_tiles(m) * k)             # reduction over i, 16 cols wide
-    acc_state, c_bytes = _routing_state_mem()
-    v_elems = NUM_CLASSES * CLASS_DIM
+    acc_state, c_bytes = _routing_state_mem(dims)
+    v_elems = dims.num_classes * dims.class_dim
     return OperationProfile(
         name="Sum+Squash",
         macs=macs,
@@ -223,23 +285,23 @@ def sum_squash_profile() -> OperationProfile:
         accum_mem=acc_state,
         data_reads=float(v_elems * 2),
         data_writes=float(v_elems),
-        weight_reads=float(NUM_PRIMARY * NUM_CLASSES),
+        weight_reads=float(dims.num_primary * dims.num_classes),
         weight_writes=0.0,
         accum_reads=float(votes),             # u_hat streamed from accum mem
         accum_writes=float(m * _tiles(k)),
-        repeats=ROUTING_ITERS,
+        repeats=dims.routing_iters,
     )
 
 
-def update_sum_profile() -> OperationProfile:
+def update_sum_profile(dims: CapsNetDims = MNIST_DIMS) -> OperationProfile:
     # b_ij += u_hat_ij . v_j ; c = softmax_j(b): executed per iteration.
-    votes = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM
+    votes = dims.num_primary * dims.num_classes * dims.class_dim
     macs = float(votes)
-    m, k = NUM_PRIMARY * NUM_CLASSES, CLASS_DIM
+    m, k = dims.num_primary * dims.num_classes, dims.class_dim
     cycles = float(_tiles(m) * k)
-    acc_state, c_bytes = _routing_state_mem()
-    v_elems = NUM_CLASSES * CLASS_DIM
-    bij = NUM_PRIMARY * NUM_CLASSES
+    acc_state, c_bytes = _routing_state_mem(dims)
+    v_elems = dims.num_classes * dims.class_dim
+    bij = dims.num_primary * dims.num_classes
     return OperationProfile(
         name="Update+Sum",
         macs=macs,
@@ -253,11 +315,12 @@ def update_sum_profile() -> OperationProfile:
         weight_writes=float(bij),             # softmax result -> c
         accum_reads=float(votes + bij),
         accum_writes=float(bij),
-        repeats=ROUTING_ITERS,
+        repeats=dims.routing_iters,
     )
 
 
-def _linebuf_variant(ops: list[OperationProfile]) -> list[OperationProfile]:
+def _linebuf_variant(ops: list[OperationProfile],
+                     dims: CapsNetDims) -> list[OperationProfile]:
     """Alternative dataflow ('linebuf'): convolutions keep only a
     kernel-height line buffer of the input plus a 3-row accumulator strip
     (instead of full-fmap residency), and the votes live in the DATA
@@ -269,27 +332,31 @@ def _linebuf_variant(ops: list[OperationProfile]) -> list[OperationProfile]:
     published PG savings)."""
     c1, pc, cc, ss, us = ops
     c1 = dataclasses.replace(
-        c1, accum_mem=3 * CONV1_OUT * CONV1_COUT * ACC_BYTES)  # 3-row strip
+        c1, accum_mem=3 * dims.conv1_out * dims.conv1_cout * ACC_BYTES)
     pc = dataclasses.replace(
         pc,
-        data_mem=PC_K * CONV1_OUT * PC_CIN * ACT_BYTES,        # line buffer
-        accum_mem=3 * PC_OUT * PC_COUT * ACC_BYTES,
+        data_mem=dims.pc_k * dims.conv1_out * dims.pc_cin * ACT_BYTES,
+        accum_mem=3 * dims.pc_out * dims.pc_cout * ACC_BYTES,
         # input streamed from off-chip once per 16-channel output group
-        data_writes=pc.data_writes * (PC_COUT // ARRAY_DIM),
+        data_writes=pc.data_writes * max(dims.pc_cout // ARRAY_DIM, 1),
     )
-    votes_b = NUM_PRIMARY * NUM_CLASSES * CLASS_DIM * ACT_BYTES
-    logits_b = NUM_PRIMARY * NUM_CLASSES * ACC_BYTES
+    votes_b = dims.num_primary * dims.num_classes * dims.class_dim * ACT_BYTES
+    logits_b = dims.num_primary * dims.num_classes * ACC_BYTES
+    # s/v accumulator state: 4 fp32 temporaries per class-capsule element
+    # (2560 B for the default MNIST network).
+    sv_b = 4 * dims.num_classes * dims.class_dim * ACC_BYTES
     cc = dataclasses.replace(
         cc, data_mem=cc.data_mem + votes_b,                    # votes in data
-        accum_mem=ARRAY_DIM * NUM_CLASSES * CLASS_DIM * ACC_BYTES)
+        accum_mem=ARRAY_DIM * dims.num_classes * dims.class_dim * ACC_BYTES)
     ss = dataclasses.replace(ss, data_mem=votes_b + ss.data_mem,
-                             accum_mem=logits_b + 2560)
+                             accum_mem=logits_b + sv_b)
     us = dataclasses.replace(us, data_mem=votes_b + us.data_mem,
-                             accum_mem=logits_b + 2560)
+                             accum_mem=logits_b + sv_b)
     return [c1, pc, cc, ss, us]
 
 
-def capsnet_profiles(dataflow: str = "resident") -> list[OperationProfile]:
+def capsnet_profiles(dataflow: str = "resident",
+                     dims: CapsNetDims = MNIST_DIMS) -> list[OperationProfile]:
     """The five operations of CapsuleNet inference, with off-chip traffic.
 
     Off-chip accesses follow paper Eq. (1)/(2): reads_i = on-chip fills
@@ -298,14 +365,16 @@ def capsnet_profiles(dataflow: str = "resident") -> list[OperationProfile]:
     (routing) never touch off-chip memory.
 
     ``dataflow``: "resident" (default, full-fmap residency) or "linebuf"
-    (see ``_linebuf_variant``).
+    (see ``_linebuf_variant``).  ``dims`` selects the network shape
+    (default: the paper's MNIST CapsuleNet).
     """
     from repro.core.energy import DRAM_BYTES_PER_CYCLE
 
-    ops = [conv1_profile(), primarycaps_profile(), classcaps_fc_profile(),
-           sum_squash_profile(), update_sum_profile()]
+    ops = [conv1_profile(dims), primarycaps_profile(dims),
+           classcaps_fc_profile(dims), sum_squash_profile(dims),
+           update_sum_profile(dims)]
     if dataflow == "linebuf":
-        ops = _linebuf_variant(ops)
+        ops = _linebuf_variant(ops, dims)
     elif dataflow != "resident":
         raise ValueError(f"unknown dataflow {dataflow!r}")
     out = []

@@ -117,8 +117,19 @@ def routing_by_agreement(u_hat: jax.Array, iters: int) -> jax.Array:
 
 
 def forward(params: Params, images: jax.Array,
-            cfg: CapsNetConfig = CapsNetConfig()) -> dict[str, jax.Array]:
-    """images: [B, H, W, C] in [0, 1] -> class capsules + reconstruction."""
+            cfg: CapsNetConfig = CapsNetConfig(), *,
+            backend: str = "jnp", plan=None,
+            interpret: bool = True) -> dict[str, jax.Array]:
+    """images: [B, H, W, C] in [0, 1] -> class capsules + reconstruction.
+
+    ``backend="jnp"`` (default) is the pure-JAX reference.
+    ``backend="pallas"`` runs the capsule head through the Pallas kernels
+    (squash -> caps_votes -> fused routing) with block shapes chosen by an
+    ``ExecutionPlan`` (compiled on the fly from ``cfg`` unless ``plan`` is
+    passed); ``interpret=True`` validates on CPU, pass False on real TPU.
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
     x = jax.lax.conv_general_dilated(
         images, params["conv1_w"], window_strides=(1, 1), padding="VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -128,9 +139,22 @@ def forward(params: Params, images: jax.Array,
         padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
     x = x + params["pc_b"]
     b = x.shape[0]
-    u = squash(x.reshape(b, cfg.num_primary, cfg.primary_dim))
-    u_hat = compute_votes(u, params["cc_w"])
-    v = routing_by_agreement(u_hat, cfg.routing_iters)     # [B, J, D]
+    u_pre = x.reshape(b, cfg.num_primary, cfg.primary_dim)
+    if backend == "pallas":
+        from repro.core import execplan as _execplan
+        from repro.kernels import ops as _kops
+        if plan is None:
+            plan = _execplan.compile_plan(cfg, batch=b)
+        u = _kops.squash(u_pre, plan=plan, interpret=interpret)
+        w = params["cc_w"].reshape(
+            cfg.num_primary, cfg.num_classes * cfg.class_dim, cfg.primary_dim)
+        votes = _kops.caps_votes(u, w, plan=plan, interpret=interpret)
+        v = _kops.routing(votes, plan=plan, interpret=interpret)
+        v = v.reshape(b, cfg.num_classes, cfg.class_dim)
+    else:
+        u = squash(u_pre)
+        u_hat = compute_votes(u, params["cc_w"])
+        v = routing_by_agreement(u_hat, cfg.routing_iters)  # [B, J, D]
     lengths = jnp.linalg.norm(v, axis=-1)                  # class scores
     out = {"class_caps": v, "lengths": lengths}
     if cfg.use_decoder and "dec_w1" in params:

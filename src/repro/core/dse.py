@@ -309,9 +309,23 @@ class DSEResult:
 
 def explore(profiles: Sequence[OperationProfile] | None = None,
             sector_choices: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128, 256),
-            ) -> list[DSEResult]:
-    """Evaluate every organization x sector count; sorted by energy."""
-    profiles = list(profiles) if profiles is not None else analysis.capsnet_profiles()
+            *, plan=None) -> list[DSEResult]:
+    """Evaluate every organization x sector count; sorted by energy.
+
+    The profiles default to those of an ``ExecutionPlan`` compiled for the
+    paper's CapsuleNet -- i.e. the PMU/energy schedule scored here is the
+    SAME schedule the Pallas kernels execute.  Pass ``plan=`` to score a
+    differently-shaped network, or raw ``profiles`` for ablations.
+    """
+    if profiles is None:
+        if plan is None:
+            from repro.core import execplan
+            from repro.core.capsnet import CapsNetConfig
+            plan = execplan.compile_plan(CapsNetConfig())
+        profiles = plan.profiles
+    elif plan is not None:
+        raise ValueError("pass either profiles or plan, not both")
+    profiles = list(profiles)
     results = []
     seen = set()
     for sectors, pg in itertools.product(sector_choices, (False, True)):
@@ -333,5 +347,11 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
     return results
 
 
-def best_design(profiles: Sequence[OperationProfile] | None = None) -> DSEResult:
-    return explore(profiles)[0]
+def best_design(profiles: Sequence[OperationProfile] | None = None,
+                *, plan=None) -> DSEResult:
+    return explore(profiles, plan=plan)[0]
+
+
+def evaluate_plan(org: MemoryOrg, plan) -> OrgEvaluation:
+    """Score ``org`` against the schedule of an ``ExecutionPlan``."""
+    return evaluate(org, plan.profiles)

@@ -1,0 +1,268 @@
+"""ExecutionPlan: ONE compiled schedule shared by kernels, PMU, and serving.
+
+CapStore's core contribution is a single per-operation schedule that sizes
+each on-chip memory and drives power-gating from it (paper Secs. 4.1-4.3).
+Before this module the repo had three parallel models of that schedule:
+``kernels/ops.py`` re-ran the block-shape DSE per call, ``core/dse.py``
+derived PMU phases from the analysis profiles, and ``core/capsnet.py``
+ignored both.  ``compile_plan`` unifies them: it compiles a
+``CapsNetConfig`` into per-operation
+
+  * Pallas block shapes (``planner.plan_matmul`` energy-argmin DSE),
+  * VMEM footprints (checked against the budget -- the TPU analogue of
+    the paper's sized-to-fit SRAMs),
+  * estimated cycles, and
+  * auto-derived ``PhaseRequirement``s (analysis.py dataflow model)
+
+so the schedule the kernels *execute* is the same schedule the PMU/energy
+model *scores* (``pmu.schedule_from_plan``, ``dse.explore(plan=...)``) and
+the serving engine *amortizes* (``serve/capsule.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+from repro.core import analysis
+from repro.core.analysis import CapsNetDims, OperationProfile
+from repro.core.capsnet import CapsNetConfig
+from repro.core.planner import (VMEM_BYTES, BlockPlan, MatmulWorkload,
+                                plan_matmul)
+from repro.core.pmu import PhaseRequirement
+
+# Kernels run in fp32 (interpret-mode validated; fp32 accumulation on TPU).
+ELEM_BYTES = 4
+SQUASH_BLOCK_ROWS = 1024
+
+
+class PlanError(ValueError):
+    """An ExecutionPlan violates one of its invariants."""
+
+
+@dataclasses.dataclass(frozen=True)
+class OpPlan:
+    """The compiled schedule entry for one CapsuleNet operation.
+
+    ``kernel`` names the executor: ``conv2d.xla`` (XLA convolution),
+    ``caps_votes`` / ``routing`` / ``squash`` (Pallas kernels).  Matmul-view
+    operations carry the planner's energy-argmin ``block``; ``block_i`` /
+    ``block_rows`` are the concrete grid tiles the kernel wrappers consume.
+    ``requirement`` is the PMU phase (ASIC dataflow-model bytes/cycles) the
+    gating schedule is built from.
+    """
+
+    name: str
+    kernel: str
+    workload: MatmulWorkload | None
+    block: BlockPlan | None
+    vmem_bytes: int
+    est_cycles: float
+    requirement: PhaseRequirement
+    profile: OperationProfile
+    block_i: int | None = None
+    block_rows: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    cfg: CapsNetConfig
+    batch: int
+    dataflow: str
+    vmem_budget: int
+    ops: tuple[OpPlan, ...]
+
+    def op(self, name: str) -> OpPlan:
+        for op in self.ops:
+            if op.name == name:
+                return op
+        raise KeyError(f"no operation {name!r} in plan "
+                       f"({[o.name for o in self.ops]})")
+
+    @property
+    def profiles(self) -> tuple[OperationProfile, ...]:
+        """The dataflow profiles this plan was compiled from (feeds dse)."""
+        return tuple(op.profile for op in self.ops)
+
+    def phase_requirements(self) -> tuple[PhaseRequirement, ...]:
+        """Per-operation PMU phases, in execution order."""
+        return tuple(op.requirement for op in self.ops)
+
+    @property
+    def peak_vmem_bytes(self) -> int:
+        return max(op.vmem_bytes for op in self.ops)
+
+    def validate(self) -> None:
+        """Check the plan invariants; raises ``PlanError`` on violation."""
+        if self.batch < 1:
+            raise PlanError(f"batch must be >= 1, got {self.batch}")
+        names = [op.name for op in self.ops]
+        if len(set(names)) != len(names):
+            raise PlanError(f"duplicate operation names: {names}")
+        expected = [p.name for p in
+                    analysis.capsnet_profiles(self.dataflow,
+                                              analysis.dims_from_config(self.cfg))]
+        if names != expected:
+            raise PlanError(f"phases {names} do not cover operations {expected}")
+        for op in self.ops:
+            if op.vmem_bytes > self.vmem_budget:
+                raise PlanError(
+                    f"{op.name}: VMEM footprint {op.vmem_bytes} exceeds "
+                    f"budget {self.vmem_budget}")
+            if op.requirement.name != op.name:
+                raise PlanError(f"{op.name}: phase named {op.requirement.name!r}")
+            if op.requirement.duration_cycles <= 0:
+                raise PlanError(f"{op.name}: non-positive phase duration")
+            if op.block is not None and op.block.vmem_total > self.vmem_budget:
+                raise PlanError(f"{op.name}: block tiles exceed VMEM budget")
+            if op.block_i is not None and not (
+                    1 <= op.block_i <= max(self.cfg.num_primary, 1)):
+                raise PlanError(f"{op.name}: block_i {op.block_i} out of range")
+
+    def summary(self) -> list[dict]:
+        rows = []
+        for op in self.ops:
+            rows.append(dict(
+                name=op.name,
+                kernel=op.kernel,
+                block=((op.block.block_m, op.block.block_k, op.block.block_n)
+                       if op.block else None),
+                block_i=op.block_i,
+                block_rows=op.block_rows,
+                vmem_kib=op.vmem_bytes / 1024,
+                est_cycles=op.est_cycles,
+                req_kib=op.requirement.required_bytes / 1024,
+                duration_cycles=op.requirement.duration_cycles,
+            ))
+        return rows
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+def _requirement(profile: OperationProfile) -> PhaseRequirement:
+    return PhaseRequirement(name=profile.name,
+                            required_bytes=profile.total_mem,
+                            duration_cycles=profile.total_cycles)
+
+
+def _votes_vmem(batch: int, block_i: int, caps_dim: int, out_dim: int) -> int:
+    """caps_votes footprint per grid step (double-buffered streams)."""
+    data = batch * block_i * caps_dim * ELEM_BYTES
+    weight = block_i * out_dim * caps_dim * ELEM_BYTES
+    accum = batch * block_i * out_dim * ELEM_BYTES
+    return 2 * (data + weight) + accum
+
+
+def _votes_block_i(dims: CapsNetDims, batch: int, vmem_budget: int
+                   ) -> tuple[MatmulWorkload, BlockPlan, int]:
+    """Planner pick for the caps-votes i-tile, shrunk to fit the budget.
+
+    The kernel supports ragged final i-blocks (grid = cdiv), so the planned
+    block is only clamped to the capsule count -- never collapsed to 1 for
+    non-power-of-two counts.
+    """
+    out_dim = dims.num_classes * dims.class_dim
+    wl = MatmulWorkload(m=dims.num_primary, k=dims.primary_dim, n=out_dim)
+    block = plan_matmul(wl, vmem_budget)
+    bi = max(min(block.block_m, dims.num_primary), 1)
+    while bi > 1 and _votes_vmem(batch, bi, dims.primary_dim,
+                                 out_dim) > vmem_budget:
+        bi //= 2
+    return wl, block, max(bi, 1)
+
+
+def _routing_vmem(dims: CapsNetDims) -> int:
+    """Fused routing footprint per grid step (one batch element)."""
+    jd = dims.num_classes * dims.class_dim
+    votes = dims.num_primary * jd * ELEM_BYTES
+    logits = dims.num_primary * dims.num_classes * ELEM_BYTES
+    out = jd * ELEM_BYTES
+    return votes + logits + out
+
+
+@functools.lru_cache(maxsize=64)
+def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
+                 vmem_budget: int = VMEM_BYTES,
+                 dataflow: str = "resident") -> ExecutionPlan:
+    """Compile ``cfg`` into the per-operation ExecutionPlan (memoized:
+    plans are immutable and the block-shape DSE runs once per shape).
+
+    The five analysis operations map onto executors as follows:
+
+      Conv1, PrimaryCaps -> XLA convolution (+ Pallas squash activation)
+      ClassCaps-FC       -> ``caps_votes`` kernel (plan-chosen i-tile)
+      Sum+Squash,
+      Update+Sum         -> ONE fused ``routing`` kernel (all iterations
+                            in VMEM -- the paper's on-chip-resident loop)
+
+    ``requirement``s (PMU phases) keep the paper's per-inference dataflow
+    model; ``vmem_bytes`` scale with ``batch`` where the kernel batches.
+    """
+    dims = analysis.dims_from_config(cfg)
+    profiles = analysis.capsnet_profiles(dataflow, dims)
+    by_name = {p.name: p for p in profiles}
+    ops: list[OpPlan] = []
+
+    # Conv stack: executed by XLA; planner still sizes the im2col matmul
+    # view so the energy model and benchmarks see one consistent schedule.
+    conv_wls = {
+        "Conv1": MatmulWorkload(m=dims.conv1_out ** 2,
+                                k=dims.conv1_k ** 2 * dims.conv1_cin,
+                                n=dims.conv1_cout),
+        "PrimaryCaps": MatmulWorkload(m=dims.pc_out ** 2,
+                                      k=dims.pc_k ** 2 * dims.pc_cin,
+                                      n=dims.pc_cout),
+    }
+    squash_rows = batch * dims.num_primary
+    block_rows = max(min(SQUASH_BLOCK_ROWS, squash_rows), 1)
+    for name, wl in conv_wls.items():
+        prof = by_name[name]
+        block = plan_matmul(wl, vmem_budget)
+        op = OpPlan(name=name, kernel="conv2d.xla", workload=wl, block=block,
+                    vmem_bytes=block.vmem_total, est_cycles=block.est_cycles,
+                    requirement=_requirement(prof), profile=prof)
+        if name == "PrimaryCaps":
+            # The primary-capsule squash activation rides on this op.
+            op = dataclasses.replace(
+                op, kernel="conv2d.xla+squash", block_rows=block_rows,
+                vmem_bytes=max(op.vmem_bytes,
+                               2 * block_rows * dims.primary_dim * ELEM_BYTES))
+        ops.append(op)
+
+    prof = by_name["ClassCaps-FC"]
+    wl, block, block_i = _votes_block_i(dims, batch, vmem_budget)
+    ops.append(OpPlan(
+        name="ClassCaps-FC", kernel="caps_votes", workload=wl, block=block,
+        block_i=block_i,
+        vmem_bytes=_votes_vmem(batch, block_i, dims.primary_dim, wl.n),
+        est_cycles=block.est_cycles, requirement=_requirement(prof),
+        profile=prof))
+
+    routing_bytes = _routing_vmem(dims)
+    if routing_bytes > vmem_budget:
+        raise PlanError(
+            f"fused routing state ({routing_bytes} B) exceeds the VMEM "
+            f"budget ({vmem_budget} B); no resident schedule exists")
+    for name in ("Sum+Squash", "Update+Sum"):
+        prof = by_name[name]
+        ops.append(OpPlan(
+            name=name, kernel="routing", workload=None, block=None,
+            vmem_bytes=routing_bytes, est_cycles=prof.total_cycles,
+            requirement=_requirement(prof), profile=prof))
+
+    plan = ExecutionPlan(cfg=cfg, batch=batch, dataflow=dataflow,
+                         vmem_budget=vmem_budget, ops=tuple(ops))
+    plan.validate()
+    return plan
+
+
+def plan_table(plans: Sequence[tuple[str, ExecutionPlan]]) -> list[dict]:
+    """Flat summary rows for benchmarks/examples."""
+    rows = []
+    for tag, plan in plans:
+        for r in plan.summary():
+            rows.append(dict(plan=tag, **r))
+    return rows

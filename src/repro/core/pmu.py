@@ -64,6 +64,17 @@ class PMUSchedule:
         return sum(p.sectors_woken for p in self.phases)
 
 
+def schedule_from_plan(memory: SRAMConfig, plan) -> PMUSchedule:
+    """PMU schedule for ``memory`` driven by an ``ExecutionPlan``.
+
+    ``plan`` is any object with a ``phase_requirements()`` method (see
+    ``repro.core.execplan.ExecutionPlan``); this is the path by which the
+    gating model scores the SAME per-operation schedule the kernels
+    execute, instead of a hand-built phase list.
+    """
+    return build_schedule(memory, plan.phase_requirements())
+
+
 def build_schedule(memory: SRAMConfig,
                    phases: Sequence[PhaseRequirement]) -> PMUSchedule:
     """Derive the sector ON/OFF schedule for one memory across the inference.

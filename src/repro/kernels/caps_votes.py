@@ -38,14 +38,16 @@ def caps_votes(u: jax.Array, w: jax.Array, *, block_i: int = 128,
                interpret: bool = True) -> jax.Array:
     """u: [B, I, C], w: [I, N, C] -> [B, I, N].
 
-    ``block_i`` is the CapStore-planned i-tile (defaults validated against
-    ``repro.core.planner``); I must be divisible by block_i.
+    ``block_i`` is the CapStore-planned i-tile (see
+    ``repro.core.execplan``).  I need NOT be divisible by block_i: the grid
+    is ``cdiv(I, block_i)`` and the final ragged block is safe because each
+    output row depends only on the same input row (Pallas clamps/masks the
+    tail block identically on the input and output side).
     """
     b, i, c = u.shape
     _, n, _ = w.shape
-    if i % block_i:
-        raise ValueError(f"I={i} not divisible by block_i={block_i}")
-    grid = (i // block_i,)
+    block_i = max(1, min(block_i, i))
+    grid = (pl.cdiv(i, block_i),)
     return pl.pallas_call(
         _votes_kernel,
         grid=grid,

@@ -1,12 +1,16 @@
-"""Jit'd public wrappers for the Pallas kernels, with CapStore-planned
-default block shapes.
+"""Jit'd public wrappers for the Pallas kernels, driven by one ExecutionPlan.
 
 Every wrapper takes ``interpret`` (default True: CPU-validated execution;
-on real TPU pass False) and falls back to documented planner defaults for
-block sizes.  The oracles live in ``repro.kernels.ref``.
+on real TPU pass False).  Block shapes come from an ``ExecutionPlan``
+(``repro.core.execplan.compile_plan``) when one is passed; otherwise the
+planner pick is computed once per shape and memoized -- wrappers never
+re-run the block-shape DSE per invocation.  The oracles live in
+``repro.kernels.ref``.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 
@@ -19,31 +23,48 @@ from repro.kernels.routing import routing as _routing
 from repro.kernels.squash import squash as _squash
 
 
+@functools.lru_cache(maxsize=None)
 def planned_block_i(num_caps: int, caps_dim: int, out_dim: int) -> int:
-    """CapStore planner pick for the caps-votes i-tile."""
+    """CapStore planner pick for the caps-votes i-tile (memoized).
+
+    The kernel handles ragged final i-blocks, so the planned block is only
+    clamped to ``num_caps`` -- it no longer degenerates to 1 for
+    non-power-of-two capsule counts.
+    """
     plan = plan_matmul(MatmulWorkload(m=num_caps, k=caps_dim, n=out_dim))
-    bi = max(min(plan.block_m, num_caps), 8)
-    while num_caps % bi:
-        bi //= 2
-    return max(bi, 1)
+    return max(min(plan.block_m, num_caps), 1)
 
 
-def caps_votes(u: jax.Array, w: jax.Array, *, block_i: int | None = None,
-               interpret: bool = True) -> jax.Array:
+def caps_votes(u: jax.Array, w: jax.Array, *, plan=None,
+               block_i: int | None = None, interpret: bool = True) -> jax.Array:
     """u: [B, I, C], w: [I, N, C] -> [B, I, N]."""
     if block_i is None:
-        block_i = planned_block_i(u.shape[1], u.shape[2], w.shape[1])
+        if plan is not None:
+            block_i = plan.op("ClassCaps-FC").block_i
+        else:
+            block_i = planned_block_i(u.shape[1], u.shape[2], w.shape[1])
     return _caps_votes(u, w, block_i=block_i, interpret=interpret)
 
 
-def routing(u_hat: jax.Array, *, iters: int = 3, num_classes: int = 10,
+def routing(u_hat: jax.Array, *, plan=None, iters: int | None = None,
+            num_classes: int | None = None,
             interpret: bool = True) -> jax.Array:
+    if iters is None:
+        iters = plan.cfg.routing_iters if plan is not None else 3
+    if num_classes is None:
+        num_classes = plan.cfg.num_classes if plan is not None else 10
     return _routing(u_hat, iters=iters, num_classes=num_classes,
                     interpret=interpret)
 
 
-def squash(x: jax.Array, *, interpret: bool = True) -> jax.Array:
-    return _squash(x, interpret=interpret)
+def squash(x: jax.Array, *, plan=None, block_rows: int | None = None,
+           interpret: bool = True) -> jax.Array:
+    if block_rows is None:
+        if plan is not None:
+            block_rows = plan.op("PrimaryCaps").block_rows
+        else:
+            block_rows = 1024
+    return _squash(x, block_rows=block_rows, interpret=interpret)
 
 
 def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,

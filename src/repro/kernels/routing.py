@@ -26,15 +26,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.capsnet import squash
+
 
 def _routing_kernel(uhat_ref, o_ref, b_scr, *, iters: int, j: int, d: int):
     uh = uhat_ref[0].astype(jnp.float32)                  # [I, J*D]
     i_dim = uh.shape[0]
     uh4 = uh.reshape(i_dim, j, d)
-
-    def squash(s):
-        sq = jnp.sum(jnp.square(s), axis=-1, keepdims=True)
-        return (sq / (1.0 + sq)) * s * jax.lax.rsqrt(sq + 1e-7)
 
     def iteration(_, b):
         c = jax.nn.softmax(b, axis=1)                     # [I, J]

@@ -3,6 +3,11 @@
 Elementwise-with-reduction over the capsule dimension; blocked over rows so
 arbitrarily many capsules stream through a fixed VMEM tile (the activation
 -unit stage of the CapsAcc pipeline).
+
+The squash math itself is ``repro.core.capsnet.squash`` -- the ONE canonical
+implementation shared by the jnp reference model, this kernel, and the fused
+routing kernel (``repro.kernels.ref.squash`` stays a deliberately separate
+oracle for validation).
 """
 
 from __future__ import annotations
@@ -13,30 +18,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.capsnet import squash as squash_reference
+
 
 def _squash_kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
-    sq = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
-    o_ref[...] = ((sq / (1.0 + sq)) * x * jax.lax.rsqrt(sq + 1e-7)
-                  ).astype(o_ref.dtype)
+    o_ref[...] = squash_reference(x).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def squash(x: jax.Array, *, block_rows: int = 1024,
            interpret: bool = True) -> jax.Array:
-    """x: [..., R, D]; squash along the last axis, blocked over R."""
+    """x: [..., R, D]; squash along the last axis, blocked over R.
+
+    Rows need not divide ``block_rows``: the grid is ``cdiv`` and the
+    ragged tail block is row-parallel safe.
+    """
     orig_shape = x.shape
     d = orig_shape[-1]
     rows = 1
     for s in orig_shape[:-1]:
         rows *= s
     x2 = x.reshape(rows, d)
-    br = min(block_rows, rows)
-    while rows % br:
-        br //= 2
+    br = max(1, min(block_rows, rows))
     out = pl.pallas_call(
         _squash_kernel,
-        grid=(rows // br,),
+        grid=(pl.cdiv(rows, br),),
         in_specs=[pl.BlockSpec((br, d), lambda r: (r, 0))],
         out_specs=pl.BlockSpec((br, d), lambda r: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),

@@ -123,9 +123,10 @@ def rs_proj(x: jax.Array, w: jax.Array, shd) -> jax.Array:
         return jax.lax.psum_scatter(xl @ wl, tp, scatter_dimension=1,
                                     tiled=True)
 
-    return jax.shard_map(f, mesh=shd.mesh,
-                         in_specs=(P(dp, None, tp), P(tp, None)),
-                         out_specs=P(dp, tp, None), check_vma=False)(x, w)
+    from repro.parallel.compat import shard_map
+    return shard_map(f, mesh=shd.mesh,
+                     in_specs=(P(dp, None, tp), P(tp, None)),
+                     out_specs=P(dp, tp, None))(x, w)
 
 
 def ag_seq(x: jax.Array, shd) -> jax.Array:
@@ -138,9 +139,10 @@ def ag_seq(x: jax.Array, shd) -> jax.Array:
     def f(xl):
         return jax.lax.all_gather(xl, tp, axis=1, tiled=True)
 
-    return jax.shard_map(f, mesh=shd.mesh,
-                         in_specs=P(dp, tp, None),
-                         out_specs=P(dp, None, None), check_vma=False)(x)
+    from repro.parallel.compat import shard_map
+    return shard_map(f, mesh=shd.mesh,
+                     in_specs=P(dp, tp, None),
+                     out_specs=P(dp, None, None))(x)
 
 
 def embed_tokens(embed: jax.Array, tokens: jax.Array,

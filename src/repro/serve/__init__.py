@@ -1,1 +1,2 @@
+from repro.serve.capsule import CapsRequest, CapsuleEngine  # noqa: F401
 from repro.serve.engine import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,54 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` package.
+
+Activated by ``tests/conftest.py`` ONLY when the real hypothesis is not
+installed, so the suite collects and runs everywhere.  It implements just
+what this repo's tests use -- ``@given(**kwargs)`` with keyword strategies,
+``@settings(max_examples=..., deadline=...)``, and the ``strategies``
+submodule -- by enumerating boundary values first and then seeded
+pseudo-random draws (every run sees the same examples).
+
+If the real hypothesis IS installed it always wins: this directory is
+appended to ``sys.path`` only on ImportError.
+"""
+
+from __future__ import annotations
+
+import random
+
+from . import strategies  # noqa: F401
+
+__version__ = "0.0.fallback"
+_SEED = 0xCA95
+
+
+class settings:
+    """Records max_examples; deadline and other knobs are accepted+ignored."""
+
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(**strats):
+    if not strats:
+        raise TypeError("fallback @given supports keyword strategies only")
+
+    def deco(fn):
+        cfg = getattr(fn, "_fallback_settings", settings())
+
+        def wrapper(*args, **kwargs):
+            rng = random.Random(_SEED)
+            streams = {name: s.example_stream(rng, cfg.max_examples)
+                       for name, s in strats.items()}
+            for idx in range(cfg.max_examples):
+                drawn = {name: streams[name][idx] for name in strats}
+                fn(*args, **drawn, **kwargs)
+        # NOT functools.wraps: copying __wrapped__ would expose the strategy
+        # parameters to pytest's fixture resolution.
+        for attr in ("__name__", "__qualname__", "__module__", "__doc__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return deco

@@ -1,0 +1,32 @@
+"""Strategies for the fallback hypothesis shim: floats / integers /
+sampled_from, each yielding boundary values first, then seeded draws."""
+
+from __future__ import annotations
+
+
+class SearchStrategy:
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self._edges = tuple(edges)
+
+    def example_stream(self, rng, n: int) -> list:
+        out = list(self._edges[:n])
+        while len(out) < n:
+            out.append(self._draw(rng))
+        return out
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> SearchStrategy:
+    mid = 0.5 * (min_value + max_value)
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          (min_value, max_value, mid))
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          (min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements), elements)

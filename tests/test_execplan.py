@@ -1,0 +1,210 @@
+"""ExecutionPlan: invariants, plan-derived PMU schedules, PMU edge cases,
+and the plan-driven Pallas forward vs the jnp reference."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import analysis, capsnet, dse
+from repro.core.capsnet import CapsNetConfig
+from repro.core.energy import SRAMConfig
+from repro.core.execplan import PlanError, compile_plan
+from repro.core.planner import VMEM_BYTES
+from repro.core.pmu import PhaseRequirement, build_schedule, schedule_from_plan
+
+KEY = jax.random.PRNGKey(0)
+CFG = CapsNetConfig()                     # the paper's MNIST network
+SMOKE = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
+                      pc_kernel=3, num_primary_groups=4, primary_dim=4,
+                      class_dim=8, decoder_hidden=(32, 64))
+# pc_out = (10 - 6)//2 + 1 = 3, groups = 3 -> num_primary = 27: odd and
+# non-power-of-two, the case that used to collapse planned_block_i to 1.
+ODD = CapsNetConfig(image_hw=14, conv1_channels=8, conv1_kernel=5,
+                    pc_kernel=6, pc_stride=2, num_primary_groups=3,
+                    primary_dim=4, class_dim=8, use_decoder=False)
+
+
+# ---------------------------------------------------------------------------
+# Plan invariants
+# ---------------------------------------------------------------------------
+
+def test_plan_covers_all_five_operations():
+    plan = compile_plan(CFG)
+    assert [op.name for op in plan.ops] == [
+        "Conv1", "PrimaryCaps", "ClassCaps-FC", "Sum+Squash", "Update+Sum"]
+    assert [r.name for r in plan.phase_requirements()] == [
+        op.name for op in plan.ops]
+
+
+@pytest.mark.parametrize("cfg", [CFG, SMOKE, ODD],
+                         ids=["mnist", "smoke", "odd"])
+@pytest.mark.parametrize("batch", [1, 4])
+def test_plan_footprints_fit_vmem(cfg, batch):
+    plan = compile_plan(cfg, batch=batch)
+    plan.validate()
+    for op in plan.ops:
+        assert op.vmem_bytes <= plan.vmem_budget <= VMEM_BYTES
+        assert op.requirement.required_bytes > 0
+        assert op.requirement.duration_cycles > 0
+    assert plan.peak_vmem_bytes <= VMEM_BYTES
+
+
+def test_plan_profiles_match_analysis():
+    """The plan's dataflow profiles ARE the paper's Fig. 4 model."""
+    plan = compile_plan(CFG)
+    want = analysis.capsnet_profiles()
+    assert [dataclasses.asdict(p) for p in plan.profiles] == [
+        dataclasses.asdict(p) for p in want]
+
+
+def test_plan_block_i_not_degenerate_for_odd_caps():
+    plan = compile_plan(ODD)
+    bi = plan.op("ClassCaps-FC").block_i
+    assert 1 < bi <= ODD.num_primary
+    assert bi >= 8              # the old //=2 loop would have returned 1
+
+
+def test_plan_rejects_impossible_budget():
+    with pytest.raises(ValueError):          # PlanError or planner failure
+        compile_plan(CFG, vmem_budget=1024)
+
+
+def test_plan_validate_catches_oversized_op():
+    plan = compile_plan(CFG)
+    bad = dataclasses.replace(plan.ops[0], vmem_bytes=plan.vmem_budget + 1)
+    broken = dataclasses.replace(plan, ops=(bad,) + plan.ops[1:])
+    with pytest.raises(PlanError):
+        broken.validate()
+
+
+def test_plan_unknown_op_lookup():
+    with pytest.raises(KeyError):
+        compile_plan(CFG).op("nonexistent")
+
+
+# ---------------------------------------------------------------------------
+# One schedule: the DSE/PMU consume what the kernels execute
+# ---------------------------------------------------------------------------
+
+def test_dse_default_uses_plan_schedule():
+    via_plan = dse.best_design(plan=compile_plan(CFG))
+    default = dse.best_design()
+    explicit = dse.best_design(analysis.capsnet_profiles())
+    assert via_plan.org_name == default.org_name == explicit.org_name
+    assert via_plan.total_mj == pytest.approx(explicit.total_mj)
+
+
+def test_dse_rejects_profiles_and_plan_together():
+    with pytest.raises(ValueError):
+        dse.explore(analysis.capsnet_profiles(), plan=compile_plan(CFG))
+
+
+def test_schedule_from_plan_matches_manual_requirements():
+    plan = compile_plan(CFG)
+    mem = SRAMConfig("m", 1 << 20, power_gated=True, banks=16,
+                     sectors_per_bank=64)
+    got = schedule_from_plan(mem, plan)
+    want = build_schedule(mem, plan.phase_requirements())
+    assert got == want
+    assert [p.name for p in got.phases] == [op.name for op in plan.ops]
+
+
+def test_evaluate_plan_matches_evaluate():
+    plan = compile_plan(CFG)
+    org = dse.design_organizations(list(plan.profiles))["PG-SEP"]
+    assert (dse.evaluate_plan(org, plan).total_mj
+            == pytest.approx(dse.evaluate(org, list(plan.profiles)).total_mj))
+
+
+# ---------------------------------------------------------------------------
+# PMU edge cases
+# ---------------------------------------------------------------------------
+
+def test_pmu_zero_capacity_memory():
+    mem = SRAMConfig("m", 0, power_gated=True, sectors_per_bank=8)
+    sched = build_schedule(mem, [PhaseRequirement("a", 1024, 100),
+                                 PhaseRequirement("b", 0, 100)])
+    for ph in sched.phases:
+        assert ph.on_fraction == 0.0
+        assert ph.sectors_woken == 0
+        assert ph.leakage_mj == 0.0
+        assert ph.wakeup_mj == 0.0
+    assert np.isfinite(sched.static_mj)
+
+
+def test_pmu_non_gated_always_fully_on_zero_wakeups():
+    mem = SRAMConfig("m", 1 << 16, power_gated=False, sectors_per_bank=8)
+    sched = build_schedule(mem, [PhaseRequirement("a", 10, 100),
+                                 PhaseRequirement("b", 1 << 16, 100),
+                                 PhaseRequirement("c", 0, 100)])
+    for ph in sched.phases:
+        assert ph.on_fraction == 1.0
+        assert ph.sectors_woken == 0
+        assert ph.wakeup_mj == 0.0
+        assert ph.wakeup_latency_cycles == 0.0
+    assert sched.total_transitions == 0
+    assert sched.wakeup_mj == 0.0
+
+
+def test_pmu_shrinking_phases_never_negative_wakeups():
+    mem = SRAMConfig("m", 1 << 16, power_gated=True, sectors_per_bank=16)
+    reqs = [PhaseRequirement(f"p{i}", b, 100)
+            for i, b in enumerate([1 << 16, 1 << 14, 1 << 12, 256, 0])]
+    sched = build_schedule(mem, reqs)
+    assert all(ph.sectors_woken >= 0 for ph in sched.phases)
+    assert [ph.sectors_woken for ph in sched.phases][1:] == [0, 0, 0, 0]
+    fr = [ph.on_fraction for ph in sched.phases]
+    assert fr == sorted(fr, reverse=True)
+
+
+def test_pmu_quantization_granularity():
+    mem = SRAMConfig("m", 1 << 20, power_gated=True, banks=16,
+                     sectors_per_bank=4)
+    for want in (0.01, 0.26, 0.5, 0.51, 0.99, 1.0):
+        sched = build_schedule(
+            mem, [PhaseRequirement("x", want * mem.capacity_bytes, 100)])
+        frac = sched.phases[0].on_fraction
+        assert frac >= want - 1e-9                    # covers the demand
+        assert frac * 4 == pytest.approx(round(frac * 4))  # whole sectors
+
+
+# ---------------------------------------------------------------------------
+# Plan-driven Pallas forward == jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [SMOKE, ODD], ids=["smoke", "odd"])
+def test_pallas_backend_matches_jnp(cfg):
+    params = capsnet.init_params(KEY, cfg)
+    imgs = jax.random.uniform(KEY, (3, cfg.image_hw, cfg.image_hw, 1))
+    want = capsnet.forward(params, imgs, cfg)
+    got = capsnet.forward(params, imgs, cfg, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got["class_caps"]),
+                               np.asarray(want["class_caps"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got["lengths"]),
+                               np.asarray(want["lengths"]),
+                               rtol=1e-4, atol=1e-4)
+    if "reconstruction" in want:
+        np.testing.assert_allclose(np.asarray(got["reconstruction"]),
+                                   np.asarray(want["reconstruction"]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_backend_accepts_precompiled_plan():
+    params = capsnet.init_params(KEY, SMOKE)
+    imgs = jax.random.uniform(KEY, (2, 14, 14, 1))
+    plan = compile_plan(SMOKE, batch=2)
+    got = capsnet.forward(params, imgs, SMOKE, backend="pallas", plan=plan)
+    want = capsnet.forward(params, imgs, SMOKE)
+    np.testing.assert_allclose(np.asarray(got["lengths"]),
+                               np.asarray(want["lengths"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_unknown_backend_rejected():
+    params = capsnet.init_params(KEY, SMOKE)
+    imgs = jax.random.uniform(KEY, (1, 14, 14, 1))
+    with pytest.raises(ValueError):
+        capsnet.forward(params, imgs, SMOKE, backend="torch")

@@ -43,6 +43,31 @@ def test_caps_votes_block_sweep():
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("i,bi", [(300, 128), (135, 32), (27, 8), (100, 256)])
+def test_caps_votes_ragged_tail(i, bi):
+    """I need not divide block_i (grid = cdiv, masked/clamped tail)."""
+    u = rand((2, i, 8))
+    w = rand((i, 40, 8))
+    got = ops.caps_votes(u, w, block_i=bi)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.caps_votes(u, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_caps_votes_planned_block_not_degenerate():
+    """Regression: non-power-of-two capsule counts used to collapse the
+    planner pick to block_i=1 via the old ``while i % bi: bi //= 2``."""
+    for i in (27, 300, 1100):
+        bi = ops.planned_block_i(i, 8, 160)
+        assert 8 <= bi <= i
+    u = rand((1, 1100, 8))
+    w = rand((1100, 160, 8))
+    got = ops.caps_votes(u, w)                    # default = planner pick
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.caps_votes(u, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # routing (fused) -- the paper's on-chip-resident loop
 # ---------------------------------------------------------------------------
@@ -86,6 +111,30 @@ def test_squash_norm_bound():
     v = ops.squash(x)
     norms = np.linalg.norm(np.asarray(v), axis=-1)
     assert (norms <= 1.0 + 1e-5).all()
+
+
+def test_squash_ragged_rows():
+    x = rand((7, 5, 8))                      # 35 rows, not a block multiple
+    got = ops.squash(x, block_rows=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.squash(x)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_squash_single_canonical_implementation():
+    """The kernel and the fused routing kernel share core.capsnet.squash
+    (ref.squash stays an independent oracle)."""
+    from repro.core.capsnet import squash as canonical
+    from repro.kernels import routing as routing_mod
+    from repro.kernels import squash as squash_mod
+    assert squash_mod.squash_reference is canonical
+    assert routing_mod.squash is canonical
+    x = rand((13, 16), scale=5.0)
+    np.testing.assert_allclose(np.asarray(canonical(x)),
+                               np.asarray(ref.squash(x)),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(ops.squash(x)),
+                               np.asarray(canonical(x)),
+                               rtol=1e-5, atol=1e-6)
 
 
 @pytest.mark.parametrize("rows,d", [(8, 64), (1024, 512), (7, 384)])

@@ -90,8 +90,8 @@ SUBPROCESS_SRC = textwrap.dedent("""
     from repro.train.optimizer import OptConfig, init_opt_state
 
     cfg = get_smoke_config("{arch}")
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = make_rules(False)
     shd = ShardingCtx(mesh, rules)
     params = init_model(jax.random.PRNGKey(0), cfg)

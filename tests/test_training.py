@@ -265,6 +265,7 @@ def test_error_feedback_unbiased_over_time():
 def test_compressed_psum_multidevice_semantics():
     """compressed_psum inside shard_map == plain mean-psum (within quant
     error), on a 1-device mesh with world=1."""
+    from repro.parallel.compat import shard_map
     from repro.parallel.compress import compressed_psum
     mesh = jax.make_mesh((1,), ("d",))
     g = jax.random.normal(KEY, (32,)) * 0.01
@@ -273,9 +274,9 @@ def test_compressed_psum_multidevice_semantics():
         out, _ = compressed_psum(x, "d", world=1)
         return out
 
-    out = jax.shard_map(f, mesh=mesh,
-                        in_specs=jax.sharding.PartitionSpec(None),
-                        out_specs=jax.sharding.PartitionSpec(None))(g)
+    out = shard_map(f, mesh=mesh,
+                    in_specs=jax.sharding.PartitionSpec(None),
+                    out_specs=jax.sharding.PartitionSpec(None))(g)
     np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=2e-4)
 
 
@@ -283,14 +284,14 @@ def test_elastic_restore_onto_resharded_mesh(tmp_path):
     """A checkpoint written by one topology restores onto another: the
     restore path reshards every leaf via the provided shardings
     (single-device CPU stands in for the new mesh)."""
-    import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.parallel.compat import make_mesh
 
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
             "b": jnp.ones((4,))}
     ckpt.save(tree, tmp_path, 7)
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     shardings = {"w": NamedSharding(mesh, P("model", None)),
                  "b": NamedSharding(mesh, P())}
     restored, manifest = ckpt.restore(tree, tmp_path, shardings=shardings)

@@ -78,8 +78,8 @@ MANUAL_TP_SRC = textwrap.dedent("""
     from repro.parallel.sharding import (ShardingCtx, make_rules,
                                          param_pspecs)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = make_rules(False)
     shd = ShardingCtx(mesh, rules)
     base = get_smoke_config("granite-3-2b")
