@@ -2,8 +2,10 @@
 
 Times the reference jnp forward against the ExecutionPlan-driven Pallas
 forward (interpret mode on CPU -- the comparison is about the shared plan,
-not raw speed off-TPU), prints the compiled plan, and drives the slot-based
-``CapsuleEngine`` over a request stream to report requests/s.
+not raw speed off-TPU), times the im2col conv kernels individually, prints
+the compiled plan, and drives the slot-based ``CapsuleEngine`` over a
+request stream reporting its full ``stats()`` (the CI perf-trajectory
+rows in ``BENCH_capsule.json``).
 """
 
 from __future__ import annotations
@@ -15,6 +17,7 @@ from benchmarks.common import row, timed
 from repro.core import capsnet
 from repro.core.capsnet import CapsNetConfig
 from repro.core.execplan import compile_plan
+from repro.kernels import ops
 from repro.serve.capsule import CapsRequest, CapsuleEngine
 
 CFG = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
@@ -44,6 +47,21 @@ def main() -> None:
     row("capsnet-forward-pallas", us,
         f"maxdiff={np.abs(got - want).max():.2e}")
 
+    # Individual plan-driven conv kernels (the PR-2 im2col path).
+    c1 = plan.op("Conv1")
+    x1, us = timed(lambda: np.asarray(ops.conv2d(
+        imgs, params["conv1_w"], params["conv1_b"], stride=1, plan_op=c1,
+        epilogue="relu")))
+    row("conv1-im2col", us,
+        f"block={c1.block.block_m}x{c1.block.block_k}x{c1.block.block_n}")
+    pc = plan.op("PrimaryCaps")
+    _, us = timed(lambda: np.asarray(ops.conv2d(
+        x1, params["pc_w"], params["pc_b"], stride=CFG.pc_stride, plan_op=pc,
+        squash_dim=CFG.primary_dim)))
+    row("primarycaps-im2col", us,
+        f"block={pc.block.block_m}x{pc.block.block_k}x{pc.block.block_n} "
+        f"fused_squash={pc.fuses_squash}")
+
     engine = CapsuleEngine(params, CFG, slots=BATCH, plan=plan)
     pool = np.asarray(imgs)
     for i in range(REQUESTS):
@@ -53,6 +71,9 @@ def main() -> None:
     row("capsule-serving", 1e6 * s["elapsed_s"] / max(s["requests"], 1),
         f"req/s={s['requests_per_s']:.1f} occupancy={s['occupancy']:.2f} "
         f"mean_lat_ms={s['mean_latency_ms']:.2f}")
+    for key in ("requests", "ticks", "requests_per_s", "mean_latency_ms",
+                "max_latency_ms", "occupancy"):
+        row(f"capsule-serving/{key}", 0.0, f"{s[key]}")
 
 
 if __name__ == "__main__":

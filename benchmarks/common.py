@@ -1,8 +1,15 @@
-"""Shared benchmark helpers: timing + CSV row emission."""
+"""Shared benchmark helpers: timing + CSV row emission.
+
+Every ``row()`` is also recorded in ``RECORDS`` so ``benchmarks.run`` can
+emit a machine-readable artifact (``--json``) for CI perf tracking.
+"""
 
 from __future__ import annotations
 
 import time
+
+# (name, us_per_call, derived) for every row emitted this process.
+RECORDS: list[dict] = []
 
 
 def timed(fn, *args, repeats: int = 3, **kw):
@@ -18,4 +25,5 @@ def timed(fn, *args, repeats: int = 3, **kw):
 def row(name: str, us: float, derived: str) -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
+    RECORDS.append(dict(name=name, us_per_call=round(us, 1), derived=derived))
     return line

@@ -1,17 +1,23 @@
 """Benchmark harness: one module per paper table/figure (+ the TPU-side
 planner, kernels, roofline, and paper-claim validation).
 
-Prints ``name,us_per_call,derived`` CSV rows.
-Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+Prints ``name,us_per_call,derived`` CSV rows.  ``--json PATH`` additionally
+writes every row as a machine-readable artifact (CI uploads
+``BENCH_capsule.json`` from the ``capsule`` module so the perf trajectory
+is tracked across commits).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...] [--json PATH]
 """
 
-import sys
+import argparse
+import json
+import platform
 import traceback
 
 from benchmarks import (bench_capsule, bench_dataflow, bench_fig4,
                         bench_fig5, bench_fig10, bench_fig11, bench_kernels,
                         bench_paper_validation, bench_planner, bench_roofline,
-                        bench_table2)
+                        bench_table2, common)
 
 MODULES = {
     "capsule": bench_capsule,
@@ -29,16 +35,31 @@ MODULES = {
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(MODULES)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("modules", nargs="*", default=[], metavar="module",
+                    help=f"subset of: {' '.join(MODULES)} (default: all)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON artifact")
+    args = ap.parse_args()
+    unknown = [n for n in args.modules if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown module(s) {unknown}; choose from {list(MODULES)}")
+    names = args.modules or list(MODULES)
     print("name,us_per_call,derived")
-    failures = 0
+    failures = []
     for name in names:
         try:
             MODULES[name].main()
         except Exception:
-            failures += 1
+            failures.append(name)
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(dict(modules=names, failures=failures,
+                           python=platform.python_version(),
+                           rows=common.RECORDS), fh, indent=1)
+        print(f"wrote {len(common.RECORDS)} rows to {args.json}")
     if failures:
         raise SystemExit(1)
 

@@ -116,55 +116,84 @@ def routing_by_agreement(u_hat: jax.Array, iters: int) -> jax.Array:
     return squash(jnp.einsum("bij,bijd->bjd", c, u_hat))  # v[b, j, d]
 
 
+def decode(params: Params, v: jax.Array,
+           cfg: CapsNetConfig = CapsNetConfig(), *,
+           labels: jax.Array | None = None,
+           lengths: jax.Array | None = None) -> jax.Array:
+    """Reconstruction decoder over the masked class capsules.
+
+    Sabour et al. mask with the TRUE label during training (so the recon
+    loss gradient flows through the labeled capsule) and with the predicted
+    class at inference: pass ``labels`` when training, omit for argmax.
+    """
+    if labels is None:
+        if lengths is None:
+            lengths = jnp.linalg.norm(v, axis=-1)
+        labels = jnp.argmax(lengths, -1)
+    mask = jax.nn.one_hot(labels, cfg.num_classes, dtype=v.dtype)
+    masked = (v * mask[..., None]).reshape(v.shape[0], -1)
+    h = jax.nn.relu(masked @ params["dec_w1"] + params["dec_b1"])
+    h = jax.nn.relu(h @ params["dec_w2"] + params["dec_b2"])
+    return jax.nn.sigmoid(h @ params["dec_w3"] + params["dec_b3"])
+
+
 def forward(params: Params, images: jax.Array,
             cfg: CapsNetConfig = CapsNetConfig(), *,
+            labels: jax.Array | None = None,
             backend: str = "jnp", plan=None,
             interpret: bool = True) -> dict[str, jax.Array]:
     """images: [B, H, W, C] in [0, 1] -> class capsules + reconstruction.
 
     ``backend="jnp"`` (default) is the pure-JAX reference.
-    ``backend="pallas"`` runs the capsule head through the Pallas kernels
-    (squash -> caps_votes -> fused routing) with block shapes chosen by an
+    ``backend="pallas"`` runs the WHOLE network through the Pallas kernels
+    (conv_im2col Conv1 -> conv_im2col PrimaryCaps with fused squash ->
+    caps_votes -> fused routing) with block shapes chosen by an
     ``ExecutionPlan`` (compiled on the fly from ``cfg`` unless ``plan`` is
     passed); ``interpret=True`` validates on CPU, pass False on real TPU.
+
+    ``labels`` masks the reconstruction decoder with the true class
+    (training semantics); when omitted the decoder masks with argmax.
     """
     if backend not in ("jnp", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
-    x = jax.lax.conv_general_dilated(
-        images, params["conv1_w"], window_strides=(1, 1), padding="VALID",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    x = jax.nn.relu(x + params["conv1_b"])
-    x = jax.lax.conv_general_dilated(
-        x, params["pc_w"], window_strides=(cfg.pc_stride, cfg.pc_stride),
-        padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    x = x + params["pc_b"]
-    b = x.shape[0]
-    u_pre = x.reshape(b, cfg.num_primary, cfg.primary_dim)
+    b = images.shape[0]
     if backend == "pallas":
         from repro.core import execplan as _execplan
         from repro.kernels import ops as _kops
         if plan is None:
             plan = _execplan.compile_plan(cfg, batch=b)
-        u = _kops.squash(u_pre, plan=plan, interpret=interpret)
+        x = _kops.conv2d(images, params["conv1_w"], params["conv1_b"],
+                         stride=1, plan_op=plan.op("Conv1"),
+                         epilogue="relu", interpret=interpret)
+        pc = plan.op("PrimaryCaps")
+        x = _kops.conv2d(x, params["pc_w"], params["pc_b"],
+                         stride=cfg.pc_stride, plan_op=pc,
+                         squash_dim=cfg.primary_dim, interpret=interpret)
+        u = x.reshape(b, cfg.num_primary, cfg.primary_dim)
+        if not pc.fuses_squash:
+            u = _kops.squash(u, plan=plan, interpret=interpret)
         w = params["cc_w"].reshape(
             cfg.num_primary, cfg.num_classes * cfg.class_dim, cfg.primary_dim)
         votes = _kops.caps_votes(u, w, plan=plan, interpret=interpret)
         v = _kops.routing(votes, plan=plan, interpret=interpret)
         v = v.reshape(b, cfg.num_classes, cfg.class_dim)
     else:
-        u = squash(u_pre)
+        x = jax.lax.conv_general_dilated(
+            images, params["conv1_w"], window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params["conv1_b"])
+        x = jax.lax.conv_general_dilated(
+            x, params["pc_w"], window_strides=(cfg.pc_stride, cfg.pc_stride),
+            padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = x + params["pc_b"]
+        u = squash(x.reshape(b, cfg.num_primary, cfg.primary_dim))
         u_hat = compute_votes(u, params["cc_w"])
         v = routing_by_agreement(u_hat, cfg.routing_iters)  # [B, J, D]
     lengths = jnp.linalg.norm(v, axis=-1)                  # class scores
     out = {"class_caps": v, "lengths": lengths}
     if cfg.use_decoder and "dec_w1" in params:
-        mask = jax.nn.one_hot(jnp.argmax(lengths, -1), cfg.num_classes,
-                              dtype=v.dtype)
-        masked = (v * mask[..., None]).reshape(b, -1)
-        h = jax.nn.relu(masked @ params["dec_w1"] + params["dec_b1"])
-        h = jax.nn.relu(h @ params["dec_w2"] + params["dec_b2"])
-        out["reconstruction"] = jax.nn.sigmoid(h @ params["dec_w3"]
-                                               + params["dec_b3"])
+        out["reconstruction"] = decode(params, v, cfg, labels=labels,
+                                       lengths=lengths)
     return out
 
 
@@ -181,7 +210,8 @@ def margin_loss(lengths: jax.Array, labels: jax.Array,
 def total_loss(params: Params, images: jax.Array, labels: jax.Array,
                cfg: CapsNetConfig = CapsNetConfig(),
                recon_weight: float = 0.0005) -> tuple[jax.Array, dict]:
-    out = forward(params, images, cfg)
+    # Training semantics: the decoder reconstructs the LABELED capsule.
+    out = forward(params, images, cfg, labels=labels)
     loss = margin_loss(out["lengths"], labels)
     metrics = {"margin_loss": loss}
     if "reconstruction" in out:

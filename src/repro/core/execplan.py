@@ -45,12 +45,13 @@ class PlanError(ValueError):
 class OpPlan:
     """The compiled schedule entry for one CapsuleNet operation.
 
-    ``kernel`` names the executor: ``conv2d.xla`` (XLA convolution),
-    ``caps_votes`` / ``routing`` / ``squash`` (Pallas kernels).  Matmul-view
-    operations carry the planner's energy-argmin ``block``; ``block_i`` /
-    ``block_rows`` are the concrete grid tiles the kernel wrappers consume.
-    ``requirement`` is the PMU phase (ASIC dataflow-model bytes/cycles) the
-    gating schedule is built from.
+    ``kernel`` names the executor -- all Pallas: ``conv_im2col``
+    (optionally ``+squash`` when the primary-capsule activation fuses into
+    the epilogue), ``caps_votes``, and ``routing``.  Matmul-view operations
+    carry the planner's energy-argmin ``block``; its ``block_m/k/n`` (conv)
+    and ``block_i`` / ``block_rows`` are the concrete grid tiles the kernel
+    wrappers consume.  ``requirement`` is the PMU phase (ASIC dataflow-model
+    bytes/cycles) the gating schedule is built from.
     """
 
     name: str
@@ -63,6 +64,11 @@ class OpPlan:
     profile: OperationProfile
     block_i: int | None = None
     block_rows: int | None = None
+
+    @property
+    def fuses_squash(self) -> bool:
+        """Whether this op's epilogue absorbs the squash activation."""
+        return self.kernel.endswith("+squash")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,13 +162,22 @@ def _votes_vmem(batch: int, block_i: int, caps_dim: int, out_dim: int) -> int:
     return 2 * (data + weight) + accum
 
 
+def _votes_max_batch(caps_dim: int, out_dim: int, vmem_budget: int) -> int:
+    """Largest batch whose block_i=1 caps-votes footprint fits the budget."""
+    fixed = 2 * out_dim * caps_dim * ELEM_BYTES          # weight tile
+    per_batch = (2 * caps_dim + out_dim) * ELEM_BYTES    # data + accum rows
+    return max((vmem_budget - fixed) // per_batch, 0)
+
+
 def _votes_block_i(dims: CapsNetDims, batch: int, vmem_budget: int
                    ) -> tuple[MatmulWorkload, BlockPlan, int]:
     """Planner pick for the caps-votes i-tile, shrunk to fit the budget.
 
     The kernel supports ragged final i-blocks (grid = cdiv), so the planned
     block is only clamped to the capsule count -- never collapsed to 1 for
-    non-power-of-two counts.
+    non-power-of-two counts.  Raises ``PlanError`` when even ``block_i=1``
+    exceeds the budget (instead of letting ``validate()`` fail later with a
+    generic footprint message).
     """
     out_dim = dims.num_classes * dims.class_dim
     wl = MatmulWorkload(m=dims.num_primary, k=dims.primary_dim, n=out_dim)
@@ -171,7 +186,22 @@ def _votes_block_i(dims: CapsNetDims, batch: int, vmem_budget: int
     while bi > 1 and _votes_vmem(batch, bi, dims.primary_dim,
                                  out_dim) > vmem_budget:
         bi //= 2
-    return wl, block, max(bi, 1)
+    need = _votes_vmem(batch, bi, dims.primary_dim, out_dim)
+    if need > vmem_budget:
+        raise PlanError(
+            f"ClassCaps-FC: no feasible schedule at batch={batch}: even "
+            f"block_i=1 needs {need} B of VMEM, over the {vmem_budget} B "
+            f"budget; largest feasible batch is "
+            f"{_votes_max_batch(dims.primary_dim, out_dim, vmem_budget)}")
+    return wl, block, bi
+
+
+def _conv_patch_vmem(in_hw: int, cin: int, k: int, out_hw: int) -> int:
+    """im2col patch-extraction footprint per grid step (one batch element):
+    the resident input feature map plus the emitted patch matrix."""
+    image = in_hw * in_hw * cin * ELEM_BYTES
+    patches = out_hw * out_hw * k * k * cin * ELEM_BYTES
+    return image + patches
 
 
 def _routing_vmem(dims: CapsNetDims) -> int:
@@ -192,7 +222,11 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
 
     The five analysis operations map onto executors as follows:
 
-      Conv1, PrimaryCaps -> XLA convolution (+ Pallas squash activation)
+      Conv1, PrimaryCaps -> ``conv_im2col`` kernels (strided Pallas patch
+                            extraction + blocked matmul over the planner's
+                            block_m/k/n tiles; PrimaryCaps fuses the squash
+                            activation into the epilogue when its n-tile is
+                            capsule-aligned)
       ClassCaps-FC       -> ``caps_votes`` kernel (plan-chosen i-tile)
       Sum+Squash,
       Update+Sum         -> ONE fused ``routing`` kernel (all iterations
@@ -206,30 +240,49 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
     by_name = {p.name: p for p in profiles}
     ops: list[OpPlan] = []
 
-    # Conv stack: executed by XLA; planner still sizes the im2col matmul
-    # view so the energy model and benchmarks see one consistent schedule.
+    # Conv stack: im2col matmuls the kernels EXECUTE with the planned
+    # tiles.  Workloads carry the real batched row count and fp32 element
+    # size so ``block.vmem_total`` is the honest double-buffered footprint
+    # (patch tile + weight tile + accumulator) of the running kernel.
     conv_wls = {
-        "Conv1": MatmulWorkload(m=dims.conv1_out ** 2,
+        "Conv1": MatmulWorkload(m=batch * dims.conv1_out ** 2,
                                 k=dims.conv1_k ** 2 * dims.conv1_cin,
-                                n=dims.conv1_cout),
-        "PrimaryCaps": MatmulWorkload(m=dims.pc_out ** 2,
+                                n=dims.conv1_cout, in_bytes=ELEM_BYTES),
+        "PrimaryCaps": MatmulWorkload(m=batch * dims.pc_out ** 2,
                                       k=dims.pc_k ** 2 * dims.pc_cin,
-                                      n=dims.pc_cout),
+                                      n=dims.pc_cout, in_bytes=ELEM_BYTES),
+    }
+    conv_patch = {
+        "Conv1": _conv_patch_vmem(dims.in_hw, dims.conv1_cin, dims.conv1_k,
+                                  dims.conv1_out),
+        "PrimaryCaps": _conv_patch_vmem(dims.conv1_out, dims.pc_cin,
+                                        dims.pc_k, dims.pc_out),
     }
     squash_rows = batch * dims.num_primary
     block_rows = max(min(SQUASH_BLOCK_ROWS, squash_rows), 1)
     for name, wl in conv_wls.items():
         prof = by_name[name]
         block = plan_matmul(wl, vmem_budget)
-        op = OpPlan(name=name, kernel="conv2d.xla", workload=wl, block=block,
-                    vmem_bytes=block.vmem_total, est_cycles=block.est_cycles,
+        bias_tile = 2 * block.block_n * ELEM_BYTES
+        op = OpPlan(name=name, kernel="conv_im2col", workload=wl, block=block,
+                    vmem_bytes=max(block.vmem_total + bias_tile,
+                                   conv_patch[name]),
+                    est_cycles=block.est_cycles,
                     requirement=_requirement(prof), profile=prof)
         if name == "PrimaryCaps":
-            # The primary-capsule squash activation rides on this op.
-            op = dataclasses.replace(
-                op, kernel="conv2d.xla+squash", block_rows=block_rows,
-                vmem_bytes=max(op.vmem_bytes,
-                               2 * block_rows * dims.primary_dim * ELEM_BYTES))
+            # The primary-capsule squash activation rides on this op: fused
+            # into the matmul epilogue when every n-tile holds whole
+            # capsules (the kernel clamps the tile to N), otherwise a
+            # standalone blocked squash pass.
+            if min(block.block_n, wl.n) % dims.primary_dim == 0:
+                op = dataclasses.replace(op, kernel="conv_im2col+squash",
+                                         block_rows=block_rows)
+            else:
+                op = dataclasses.replace(
+                    op, block_rows=block_rows,
+                    vmem_bytes=max(op.vmem_bytes,
+                                   2 * block_rows * dims.primary_dim
+                                   * ELEM_BYTES))
         ops.append(op)
 
     prof = by_name["ClassCaps-FC"]

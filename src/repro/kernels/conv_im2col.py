@@ -1,0 +1,170 @@
+"""Plan-driven im2col convolution kernels: Conv1 / PrimaryCaps on the MXU.
+
+CapsAcc (Marchisio et al. 2018) and DESCNet run the CapsuleNet conv stack
+as im2col matmuls on the same PE array as the capsule operations; CapStore
+sizes the on-chip memories from that schedule.  These kernels are the TPU
+translation, in two Pallas stages:
+
+  1. ``im2col_patches``: strided patch extraction.  One grid step per batch
+     element keeps the (small) input feature map resident in VMEM (the
+     paper's data memory) and emits the [OH*OW, KH*KW*C] patch matrix.
+
+  2. ``matmul_bias_act``: blocked [M, K] x [K, N] matmul over the plan's
+     ``block_m/k/n`` grid tiles with a fused epilogue (bias + ReLU for
+     Conv1, bias + per-capsule squash for PrimaryCaps).  The patch tile is
+     the data memory, the weight tile streams (double-buffered), and the
+     output block is the accumulator that stays resident across the K grid
+     axis -- the paper's accumulator memory.
+
+Ragged final M/N blocks are safe the same way ``caps_votes`` is: Pallas
+clamps the tail block identically on the input and output side, and each
+(mi, ni) grid cell recomputes its full K reduction, so overlapped rows are
+rewritten with identical values.  The K axis is different -- a clamped tail
+block would double-count the overlap -- so K is zero-padded up to a
+multiple of ``block_k`` instead (zero rows contribute nothing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.capsnet import squash as squash_reference
+
+EPILOGUES = ("none", "relu", "squash")
+
+
+def _patches_kernel(x_ref, o_ref, *, kh: int, kw: int, stride: int,
+                    oh: int, ow: int):
+    x = x_ref[0]                                   # [H, W, C]
+    c = x.shape[-1]
+    taps = []
+    for i in range(kh):                            # static unroll: one strided
+        for j in range(kw):                        # slice per kernel tap
+            taps.append(jax.lax.slice(
+                x, (i, j, 0),
+                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (stride, stride, 1)))              # [OH, OW, C]
+    p = jnp.stack(taps, axis=2)                    # [OH, OW, KH*KW, C]
+    o_ref[0] = p.reshape(oh * ow, kh * kw * c)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "interpret"))
+def im2col_patches(x: jax.Array, *, kh: int, kw: int, stride: int = 1,
+                   interpret: bool = True) -> jax.Array:
+    """x: [B, H, W, C] -> patches [B, OH*OW, KH*KW*C] (VALID padding).
+
+    Patch column order is ``(kh, kw, c)``-major, matching
+    ``w.reshape(KH*KW*C, Cout)`` of an HWIO weight tensor.
+    """
+    b, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    kernel = functools.partial(_patches_kernel, kh=kh, kw=kw, stride=stride,
+                               oh=oh, ow=ow)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh * ow, kh * kw * c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, oh * ow, kh * kw * c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _matmul_kernel(p_ref, w_ref, b_ref, o_ref, *, k_steps: int,
+                   epilogue: str, squash_dim: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        p_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(ki == k_steps - 1)
+    def _():
+        acc = o_ref[...] + b_ref[...]              # [TM, TN] + [1, TN]
+        if epilogue == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif epilogue == "squash":
+            tm, tn = acc.shape
+            acc = squash_reference(
+                acc.reshape(tm, tn // squash_dim, squash_dim)
+            ).reshape(tm, tn)
+        o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_k", "block_n", "epilogue", "squash_dim", "interpret"))
+def matmul_bias_act(p: jax.Array, w: jax.Array, bias: jax.Array, *,
+                    block_m: int = 128, block_k: int = 128,
+                    block_n: int = 128, epilogue: str = "none",
+                    squash_dim: int = 0, interpret: bool = True) -> jax.Array:
+    """p: [M, K], w: [K, N], bias: [N] -> epilogue(p @ w + bias): [M, N].
+
+    ``epilogue="squash"`` treats every ``squash_dim`` consecutive output
+    channels as one capsule and squashes it in-register before writeback
+    (requires ``block_n`` and ``N`` to be multiples of ``squash_dim`` so
+    ragged/clamped N tiles stay capsule-aligned).
+    """
+    m, k = p.shape
+    _, n = w.shape
+    if epilogue not in EPILOGUES:
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    bm = max(1, min(block_m, m))
+    bn = max(1, min(block_n, n))
+    bk = max(1, min(block_k, k))
+    if epilogue == "squash" and (squash_dim < 1 or bn % squash_dim
+                                 or n % squash_dim):
+        raise ValueError(
+            f"squash epilogue needs a positive capsule dim dividing both "
+            f"block_n ({bn}) and N ({n}); got squash_dim={squash_dim}")
+    if k % bk:                                     # zero-pad K: a clamped tail
+        pad = bk - k % bk                          # K-block would double-count
+        p = jnp.pad(p, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+        k += pad
+    k_steps = k // bk
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps,
+                               epilogue=epilogue, squash_dim=squash_dim)
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn), k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((1, bn), lambda mi, ni, ki: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(p, w, bias.reshape(1, n))
+
+
+def conv2d_im2col(x: jax.Array, w: jax.Array, bias: jax.Array, *,
+                  stride: int = 1, block_m: int = 128, block_k: int = 128,
+                  block_n: int = 128, epilogue: str = "none",
+                  squash_dim: int = 0, interpret: bool = True) -> jax.Array:
+    """VALID conv as im2col matmul: x [B,H,W,Cin], w [KH,KW,Cin,Cout] HWIO.
+
+    Returns ``epilogue(conv(x, w) + bias)`` as [B, OH, OW, Cout].  Block
+    shapes come from the ExecutionPlan (see ``kernels/ops.py``).
+    """
+    b, h, w_hw, cin = x.shape
+    kh, kw, _, cout = w.shape
+    oh = (h - kh) // stride + 1
+    ow = (w_hw - kw) // stride + 1
+    patches = im2col_patches(x, kh=kh, kw=kw, stride=stride,
+                             interpret=interpret)
+    out = matmul_bias_act(
+        patches.reshape(b * oh * ow, kh * kw * cin),
+        w.reshape(kh * kw * cin, cout), bias,
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        epilogue=epilogue, squash_dim=squash_dim, interpret=interpret)
+    return out.reshape(b, oh, ow, cout).astype(x.dtype)

@@ -17,10 +17,45 @@ import jax
 from repro.core.planner import MatmulWorkload, plan_matmul
 from repro.kernels import ref
 from repro.kernels.caps_votes import caps_votes as _caps_votes
+from repro.kernels.conv_im2col import conv2d_im2col as _conv2d
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.routing import routing as _routing
 from repro.kernels.squash import squash as _squash
+
+
+@functools.lru_cache(maxsize=64)            # m folds in the batch: bounded
+def planned_conv_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """CapStore planner pick for a conv's im2col matmul tiles (memoized,
+    fp32 elements -- the dtype the conv kernels run in)."""
+    plan = plan_matmul(MatmulWorkload(m=m, k=k, n=n, in_bytes=4))
+    return plan.block_m, plan.block_k, plan.block_n
+
+
+def conv2d(x, w, b, *, stride: int = 1, plan_op=None, epilogue: str = "none",
+           squash_dim: int = 0, interpret: bool = True):
+    """Plan-driven im2col conv: x [B,H,W,Cin], w [KH,KW,Cin,Cout] (HWIO).
+
+    ``plan_op`` is the matching ``OpPlan`` (``plan.op("Conv1")`` /
+    ``plan.op("PrimaryCaps")``); without one the planner pick is computed
+    once per shape and memoized.  A plan op that fuses the squash
+    activation (``plan_op.fuses_squash``) forces the squash epilogue --
+    callers only supply ``squash_dim``.
+    """
+    if plan_op is not None:
+        bm, bk, bn = (plan_op.block.block_m, plan_op.block.block_k,
+                      plan_op.block.block_n)
+        if plan_op.fuses_squash:
+            epilogue = "squash"
+    else:
+        kh, kw, cin, cout = w.shape
+        oh = (x.shape[1] - kh) // stride + 1
+        ow = (x.shape[2] - kw) // stride + 1
+        bm, bk, bn = planned_conv_blocks(x.shape[0] * oh * ow,
+                                         kh * kw * cin, cout)
+    return _conv2d(x, w, b, stride=stride, block_m=bm, block_k=bk,
+                   block_n=bn, epilogue=epilogue, squash_dim=squash_dim,
+                   interpret=interpret)
 
 
 @functools.lru_cache(maxsize=None)
@@ -79,5 +114,5 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                   interpret=interpret)
 
 
-__all__ = ["caps_votes", "routing", "squash", "rmsnorm", "flash_attention",
-           "planned_block_i", "ref"]
+__all__ = ["conv2d", "caps_votes", "routing", "squash", "rmsnorm",
+           "flash_attention", "planned_block_i", "planned_conv_blocks", "ref"]

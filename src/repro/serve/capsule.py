@@ -77,6 +77,18 @@ class CapsuleEngine:
 
     # -- admission -------------------------------------------------------
     def submit(self, req: CapsRequest) -> None:
+        """Queue ``req``; rejects images whose layout does not match the
+        engine input (a same-size [C, H, W] array would otherwise be
+        silently reinterpreted as [H, W, C] garbage)."""
+        img = np.asarray(req.image, np.float32)
+        want = self._batch.shape[1:]
+        if img.shape != want:
+            raise ValueError(
+                f"request {req.rid}: image shape {img.shape} does not match "
+                f"the engine input shape {want} (H, W, C for "
+                f"image_hw={self.cfg.image_hw}, "
+                f"in_channels={self.cfg.in_channels}); refusing to reshape")
+        req.image = img
         req.submitted_s = time.perf_counter()
         self.queue.append(req)
 
@@ -84,8 +96,7 @@ class CapsuleEngine:
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue.popleft()
-                self._batch[s] = np.asarray(req.image, np.float32).reshape(
-                    self._batch.shape[1:])
+                self._batch[s] = req.image        # shape-checked in submit()
                 self.active[s] = req
 
     # -- main loop -------------------------------------------------------

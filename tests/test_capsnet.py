@@ -104,6 +104,56 @@ def test_training_reduces_loss():
     assert np.mean(accs[-40:]) > 0.12      # above 10% chance (batch=16 noise)
 
 
+def test_decoder_masks_with_labels_when_given():
+    """Training semantics (Sabour et al.): the decoder reconstructs the
+    LABELED capsule, not the argmax one."""
+    params = capsnet.init_params(KEY, SMOKE)
+    imgs = jax.random.uniform(KEY, (4, 14, 14, 1))
+    out = capsnet.forward(params, imgs, SMOKE)
+    pred = np.asarray(jnp.argmax(out["lengths"], -1))
+    wrong = jnp.asarray((pred + 1) % SMOKE.num_classes)
+    out_lbl = capsnet.forward(params, imgs, SMOKE, labels=wrong)
+    # class capsules identical; only the decoder mask changes
+    np.testing.assert_array_equal(np.asarray(out["class_caps"]),
+                                  np.asarray(out_lbl["class_caps"]))
+    diff = np.abs(np.asarray(out["reconstruction"])
+                  - np.asarray(out_lbl["reconstruction"])).max()
+    assert diff > 1e-6
+    # masking with the predicted class reproduces the argmax behaviour
+    out_pred = capsnet.forward(params, imgs, SMOKE, labels=jnp.asarray(pred))
+    np.testing.assert_allclose(np.asarray(out_pred["reconstruction"]),
+                               np.asarray(out["reconstruction"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_recon_gradient_flows_through_labeled_capsule():
+    """d(recon loss)/d(class capsules) is nonzero ONLY at the labeled
+    capsule -- the regression the unconditional-argmax mask broke."""
+    params = capsnet.init_params(KEY, SMOKE)
+    v = jax.random.normal(KEY, (2, SMOKE.num_classes, SMOKE.class_dim))
+    labels = jnp.array([3, 7])
+
+    def recon_sum(v):
+        return jnp.sum(capsnet.decode(params, v, SMOKE, labels=labels))
+
+    g = np.asarray(jax.grad(recon_sum)(v))
+    for b, lbl in enumerate([3, 7]):
+        assert np.abs(g[b, lbl]).max() > 0.0
+        others = np.delete(g[b], lbl, axis=0)
+        np.testing.assert_array_equal(others, np.zeros_like(others))
+
+
+def test_total_loss_reconstructs_labeled_capsule():
+    params = capsnet.init_params(KEY, SMOKE)
+    imgs = jax.random.uniform(KEY, (3, 14, 14, 1))
+    labels = jnp.array([1, 2, 3])
+    _, metrics = capsnet.total_loss(params, imgs, labels, SMOKE)
+    out = capsnet.forward(params, imgs, SMOKE, labels=labels)
+    flat = imgs.reshape(3, -1)
+    want = jnp.mean(jnp.sum(jnp.square(out["reconstruction"] - flat), -1))
+    assert float(metrics["recon_loss"]) == pytest.approx(float(want))
+
+
 def test_pallas_capsnet_head_equivalence():
     """core.capsnet votes+routing == kernels (caps_votes + fused routing)."""
     from repro.kernels import ops

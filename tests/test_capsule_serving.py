@@ -88,6 +88,26 @@ def test_engine_pallas_backend_matches_jnp_engine():
                                    rtol=1e-4, atol=1e-4)
 
 
+def test_engine_rejects_mismatched_image_layout():
+    """A same-size CHW image must be rejected, not silently reinterpreted
+    as HWC garbage (the old reshape accepted any same-size layout)."""
+    engine = CapsuleEngine(PARAMS, CFG, slots=2)
+    good = _images(1)[0]                                   # [14, 14, 1] HWC
+    chw = np.transpose(good, (2, 0, 1))                    # [1, 14, 14] CHW
+    with pytest.raises(ValueError, match="does not match"):
+        engine.submit(CapsRequest(rid=0, image=chw))
+    with pytest.raises(ValueError, match="does not match"):
+        engine.submit(CapsRequest(rid=1, image=good.reshape(-1)))  # flat
+    with pytest.raises(ValueError, match="does not match"):
+        engine.submit(CapsRequest(rid=2, image=good[..., 0]))      # [14, 14]
+    assert not engine.queue                                # nothing admitted
+    engine.submit(CapsRequest(rid=3, image=good))          # correct layout
+    assert len(engine.queue) == 1
+    done = engine.run()
+    want = np.asarray(capsnet.forward(PARAMS, good[None], CFG)["lengths"][0])
+    np.testing.assert_allclose(done[0].lengths, want, rtol=1e-5, atol=1e-5)
+
+
 def test_engine_empty_step_is_noop():
     engine = CapsuleEngine(PARAMS, CFG, slots=2)
     assert engine.step() == 0

@@ -24,6 +24,13 @@ SMOKE = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
 ODD = CapsNetConfig(image_hw=14, conv1_channels=8, conv1_kernel=5,
                     pc_kernel=6, pc_stride=2, num_primary_groups=3,
                     primary_dim=4, class_dim=8, use_decoder=False)
+# Odd image, 24 capsule groups: every conv im2col matmul dimension is
+# non-power-of-two (Conv1 M = B*121, K = 25, N = 24; PrimaryCaps M = B*25,
+# K = 216, N = 96), so the Pallas conv kernels run ragged final M/N blocks
+# and K zero-padding end to end.
+NONPOW2 = CapsNetConfig(image_hw=15, conv1_channels=24, conv1_kernel=5,
+                        pc_kernel=3, pc_stride=2, num_primary_groups=24,
+                        primary_dim=4, class_dim=8, use_decoder=False)
 
 
 # ---------------------------------------------------------------------------
@@ -66,9 +73,87 @@ def test_plan_block_i_not_degenerate_for_odd_caps():
     assert bi >= 8              # the old //=2 loop would have returned 1
 
 
+@pytest.mark.parametrize("cfg", [CFG, SMOKE, ODD, NONPOW2],
+                         ids=["mnist", "smoke", "odd", "nonpow2"])
+def test_plan_runs_whole_network_through_pallas(cfg):
+    """No conv2d.xla asterisk left: every operation has a Pallas executor."""
+    plan = compile_plan(cfg, batch=2)
+    kernels = {op.name: op.kernel for op in plan.ops}
+    assert not any("xla" in k for k in kernels.values()), kernels
+    assert kernels["Conv1"] == "conv_im2col"
+    assert kernels["PrimaryCaps"].startswith("conv_im2col")
+    assert kernels["ClassCaps-FC"] == "caps_votes"
+    for name in ("Conv1", "PrimaryCaps"):
+        blk = plan.op(name).block
+        assert blk is not None and blk.block_m >= 1 and blk.block_k >= 1
+
+
+def test_primarycaps_squash_fuses_when_tile_capsule_aligned():
+    plan = compile_plan(CFG)
+    pc = plan.op("PrimaryCaps")
+    assert pc.block.block_n % CFG.primary_dim == 0
+    assert pc.kernel == "conv_im2col+squash" and pc.fuses_squash
+    assert pc.block_rows is not None          # fallback tile still planned
+
+
+def test_primarycaps_squash_fuses_on_clamped_tile():
+    """Fusion keys on the CLAMPED n-tile: primary_dim=12 does not divide a
+    planner block_n of 128, but the kernel clamps the tile to pc_cout=96,
+    which 12 does divide."""
+    cfg = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
+                        pc_kernel=3, num_primary_groups=8, primary_dim=12,
+                        class_dim=8, use_decoder=False)
+    plan = compile_plan(cfg, batch=2)
+    pc = plan.op("PrimaryCaps")
+    assert cfg.pc_channels == 96
+    assert min(pc.block.block_n, cfg.pc_channels) % cfg.primary_dim == 0
+    assert pc.fuses_squash
+    # and the forward still matches the reference through the fused path
+    params = capsnet.init_params(KEY, cfg)
+    imgs = jax.random.uniform(KEY, (2, 14, 14, 1))
+    want = capsnet.forward(params, imgs, cfg)
+    got = capsnet.forward(params, imgs, cfg, backend="pallas", plan=plan)
+    np.testing.assert_allclose(np.asarray(got["lengths"]),
+                               np.asarray(want["lengths"]),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_plan_rejects_impossible_budget():
     with pytest.raises(ValueError):          # PlanError or planner failure
         compile_plan(CFG, vmem_budget=1024)
+
+
+def test_votes_block_i_raises_plan_error_at_source():
+    """An infeasible batch fails in _votes_block_i with a message naming
+    the batch, the budget, and the largest feasible batch -- not later in
+    validate() with a generic footprint complaint."""
+    from repro.core.execplan import _votes_block_i, _votes_max_batch
+    dims = analysis.dims_from_config(SMOKE)
+    out_dim = dims.num_classes * dims.class_dim
+    budget = 200_000
+    feasible = _votes_max_batch(dims.primary_dim, out_dim, budget)
+    assert feasible > 0
+    # boundary: the largest feasible batch compiles, one past it raises
+    wl, block, bi = _votes_block_i(dims, feasible, budget)
+    assert bi >= 1
+    with pytest.raises(PlanError) as exc:
+        _votes_block_i(dims, feasible + 1, budget)
+    msg = str(exc.value)
+    assert f"batch={feasible + 1}" in msg
+    assert str(budget) in msg
+    assert f"largest feasible batch is {feasible}" in msg
+
+
+def test_compile_plan_surfaces_votes_plan_error():
+    """compile_plan at an over-budget batch reports the caps-votes message
+    (convs and routing fit; the batched votes footprint is what breaks)."""
+    from repro.core.execplan import _votes_max_batch
+    dims = analysis.dims_from_config(SMOKE)
+    budget = 400_000
+    bad = _votes_max_batch(dims.primary_dim,
+                           dims.num_classes * dims.class_dim, budget) + 1
+    with pytest.raises(PlanError, match="largest feasible batch"):
+        compile_plan(SMOKE, batch=bad, vmem_budget=budget)
 
 
 def test_plan_validate_catches_oversized_op():
@@ -174,7 +259,8 @@ def test_pmu_quantization_granularity():
 # Plan-driven Pallas forward == jnp reference
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("cfg", [SMOKE, ODD], ids=["smoke", "odd"])
+@pytest.mark.parametrize("cfg", [SMOKE, ODD, NONPOW2],
+                         ids=["smoke", "odd", "nonpow2"])
 def test_pallas_backend_matches_jnp(cfg):
     params = capsnet.init_params(KEY, cfg)
     imgs = jax.random.uniform(KEY, (3, cfg.image_hw, cfg.image_hw, 1))
