@@ -2,10 +2,12 @@
 
 Times the reference jnp forward against the ExecutionPlan-driven Pallas
 forward (interpret mode on CPU -- the comparison is about the shared plan,
-not raw speed off-TPU), times the im2col conv kernels individually, prints
-the compiled plan, and drives the slot-based ``CapsuleEngine`` over a
-request stream reporting its full ``stats()`` (the CI perf-trajectory
-rows in ``BENCH_capsule.json``).
+not raw speed off-TPU), times the im2col conv kernels and the fused
+votes+routing megakernel against the split ``caps_votes`` -> ``routing``
+pair (with the modeled HBM bytes each moves -- the u_hat round-trip the
+fusion kills), prints the compiled plan, and drives the slot-based
+``CapsuleEngine`` over a request stream reporting its full ``stats()``
+(the CI perf-trajectory rows in ``BENCH_capsule.json``).
 """
 
 from __future__ import annotations
@@ -16,7 +18,8 @@ import numpy as np
 from benchmarks.common import row, timed
 from repro.core import capsnet
 from repro.core.capsnet import CapsNetConfig
-from repro.core.execplan import compile_plan
+from repro.core.execplan import (FUSED_NAME, compile_plan,
+                                 split_votes_routing_hbm_bytes)
 from repro.kernels import ops
 from repro.serve.capsule import CapsRequest, CapsuleEngine
 
@@ -35,8 +38,9 @@ def main() -> None:
 
     for r in plan.summary():
         row(f"plan/{r['name']}", 0.0,
-            f"kernel={r['kernel']} block={r['block']} "
-            f"vmem_kib={r['vmem_kib']:.1f}")
+            f"kernel={r['kernel']} block={r['block']} mode={r['mode']} "
+            f"vmem_kib={r['vmem_kib']:.1f} "
+            f"uhat_hbm_bytes={r['uhat_hbm_bytes']}")
 
     f_jnp = jax.jit(lambda p, x: capsnet.forward(p, x, CFG)["lengths"])
     f_pal = jax.jit(lambda p, x: capsnet.forward(p, x, CFG, backend="pallas",
@@ -62,6 +66,29 @@ def main() -> None:
         f"block={pc.block.block_m}x{pc.block.block_k}x{pc.block.block_n} "
         f"fused_squash={pc.fuses_squash}")
 
+    # Fused votes+routing megakernel vs the split caps_votes -> routing
+    # pair, plus the modeled HBM bytes each schedule moves per forward.
+    fused_op = plan.op(FUSED_NAME)
+    jd = CFG.num_classes * CFG.class_dim
+    u = capsnet.squash(jax.random.normal(
+        key, (BATCH, CFG.num_primary, CFG.primary_dim)))
+    w = params["cc_w"].reshape(CFG.num_primary, jd, CFG.primary_dim)
+    fused, us = timed(lambda: np.asarray(ops.votes_routing(
+        u, w, plan=plan)))
+    row("votes-routing-fused", us,
+        f"mode={fused_op.mode} block_i={fused_op.block_i}")
+    split, us = timed(lambda: np.asarray(ops.routing(
+        ops.caps_votes(u, w, plan=plan), plan=plan)))
+    row("votes-routing-split", us,
+        f"maxdiff={np.abs(fused - split).max():.2e}")
+    split_bytes, uhat_bytes = split_votes_routing_hbm_bytes(
+        BATCH, CFG.num_primary, CFG.primary_dim, jd)
+    row("votes-routing/hbm-bytes-fused", 0.0, f"{fused_op.hbm_bytes:.0f}")
+    row("votes-routing/hbm-bytes-split", 0.0, f"{split_bytes:.0f}")
+    row("votes-routing/hbm-bytes-uhat-saved", 0.0,
+        f"{uhat_bytes:.0f} (u_hat round-trip killed; fused uhat_hbm_bytes="
+        f"{fused_op.uhat_hbm_bytes:.0f})")
+
     engine = CapsuleEngine(params, CFG, slots=BATCH, plan=plan)
     pool = np.asarray(imgs)
     for i in range(REQUESTS):
@@ -70,7 +97,7 @@ def main() -> None:
     s = engine.stats()
     row("capsule-serving", 1e6 * s["elapsed_s"] / max(s["requests"], 1),
         f"req/s={s['requests_per_s']:.1f} occupancy={s['occupancy']:.2f} "
-        f"mean_lat_ms={s['mean_latency_ms']:.2f}")
+        f"mean_lat_ms={s['mean_latency_ms']:.2f}", gate=False)
     for key in ("requests", "ticks", "requests_per_s", "mean_latency_ms",
                 "max_latency_ms", "occupancy"):
         row(f"capsule-serving/{key}", 0.0, f"{s[key]}")

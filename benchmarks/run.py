@@ -4,9 +4,14 @@ planner, kernels, roofline, and paper-claim validation).
 Prints ``name,us_per_call,derived`` CSV rows.  ``--json PATH`` additionally
 writes every row as a machine-readable artifact (CI uploads
 ``BENCH_capsule.json`` from the ``capsule`` module so the perf trajectory
-is tracked across commits).
+is tracked across commits).  ``--baseline PATH`` compares this run's
+``us_per_call`` against a prior artifact and FAILS on regressions beyond
+``--regression-factor`` (default 1.5x) -- CI runs the capsule module
+against the committed ``benchmarks/BENCH_baseline.json`` so the perf
+trajectory actually gates.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...] [--json PATH]
+       [--baseline PATH] [--regression-factor X]
 """
 
 import argparse
@@ -33,6 +38,44 @@ MODULES = {
     "validation": bench_paper_validation,
 }
 
+def compare_baseline(rows: list[dict], baseline: dict,
+                     factor: float) -> list[dict]:
+    """Rows regressing beyond ``factor`` vs the baseline artifact.
+
+    Only rows timed in BOTH runs participate (``us_per_call > 0``; the
+    0.0-timed derived/plan rows carry no perf signal, and rows emitted
+    with ``gate=False`` are wall-clock observations).  Machine speed is
+    normalized out by the MEDIAN current/baseline ratio across the shared
+    rows: a uniformly slower CI runner shifts every ratio (and the
+    median with it) so nothing is flagged, while a single genuinely
+    regressed row stands out against the unmoved median.
+
+    Two accepted limitations of self-normalization: a regression hitting
+    HALF or more of the gated rows moves the median with it and escapes
+    (there is no absolute clock to compare against across machines), and
+    machines whose per-row speed RATIOS differ from the baseline
+    author's (BLAS/threading/cache differences) shift individual rows --
+    CI therefore gates with a looser factor than the local default.
+    """
+    base = {r["name"]: r.get("us_per_call", 0.0)
+            for r in baseline.get("rows", [])}
+    cur = {r["name"]: r.get("us_per_call", 0.0) for r in rows
+           if r.get("gate", True)}
+    shared = {name: us / base[name] for name, us in cur.items()
+              if us > 0.0 and base.get(name, 0.0) > 0.0}
+    if not shared:
+        return []
+    ratios = sorted(shared.values())
+    scale = ratios[len(ratios) // 2]              # median speed delta
+    regressions = []
+    for name, ratio in sorted(shared.items()):
+        if ratio / scale > factor:
+            regressions.append(dict(name=name, ratio=round(ratio / scale, 2),
+                                    us_per_call=cur[name],
+                                    baseline_us=base[name],
+                                    scale=round(scale, 3)))
+    return regressions
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -40,6 +83,11 @@ def main() -> None:
                     help=f"subset of: {' '.join(MODULES)} (default: all)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as a JSON artifact")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="prior --json artifact to gate us_per_call against")
+    ap.add_argument("--regression-factor", type=float, default=1.5,
+                    metavar="X", help="fail when a row exceeds X * baseline "
+                    "(speed-normalized; default 1.5)")
     args = ap.parse_args()
     unknown = [n for n in args.modules if n not in MODULES]
     if unknown:
@@ -54,6 +102,21 @@ def main() -> None:
             failures.append(name)
             print(f"{name},0.0,ERROR", flush=True)
             traceback.print_exc()
+    if args.baseline:                 # gate BEFORE the artifact dump so a
+        with open(args.baseline) as fh:   # baseline failure is recorded in it
+            regressions = compare_baseline(common.RECORDS, json.load(fh),
+                                           args.regression_factor)
+        if regressions:
+            print(f"PERF REGRESSIONS vs {args.baseline} "
+                  f"(>{args.regression_factor}x, speed-normalized):")
+            for r in regressions:
+                print(f"  {r['name']}: {r['us_per_call']:.1f} us vs "
+                      f"{r['baseline_us']:.1f} us baseline "
+                      f"({r['ratio']}x at scale {r['scale']})")
+            failures.append("baseline")
+        else:
+            print(f"no perf regressions vs {args.baseline} "
+                  f"(factor {args.regression_factor}x)")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(dict(modules=names, failures=failures,

@@ -147,9 +147,10 @@ def forward(params: Params, images: jax.Array,
     ``backend="jnp"`` (default) is the pure-JAX reference.
     ``backend="pallas"`` runs the WHOLE network through the Pallas kernels
     (conv_im2col Conv1 -> conv_im2col PrimaryCaps with fused squash ->
-    caps_votes -> fused routing) with block shapes chosen by an
-    ``ExecutionPlan`` (compiled on the fly from ``cfg`` unless ``plan`` is
-    passed); ``interpret=True`` validates on CPU, pass False on real TPU.
+    ONE fused votes_routing megakernel) with block shapes and the
+    resident/streamed routing schedule chosen by an ``ExecutionPlan``
+    (compiled on the fly from ``cfg`` unless ``plan`` is passed);
+    ``interpret=True`` validates on CPU, pass False on real TPU.
 
     ``labels`` masks the reconstruction decoder with the true class
     (training semantics); when omitted the decoder masks with argmax.
@@ -174,8 +175,9 @@ def forward(params: Params, images: jax.Array,
             u = _kops.squash(u, plan=plan, interpret=interpret)
         w = params["cc_w"].reshape(
             cfg.num_primary, cfg.num_classes * cfg.class_dim, cfg.primary_dim)
-        votes = _kops.caps_votes(u, w, plan=plan, interpret=interpret)
-        v = _kops.routing(votes, plan=plan, interpret=interpret)
+        # ONE fused megakernel: votes + all routing iterations on-chip
+        # (u_hat never round-trips through HBM).
+        v = _kops.votes_routing(u, w, plan=plan, interpret=interpret)
         v = v.reshape(b, cfg.num_classes, cfg.class_dim)
     else:
         x = jax.lax.conv_general_dilated(

@@ -162,10 +162,19 @@ def _component_routing(org: MemoryOrg, op: OperationProfile,
 
 
 def _phase_requirements(org: MemoryOrg, sram_name: str,
-                        profiles: Sequence[OperationProfile]) -> list[PhaseRequirement]:
-    """Per-op byte demand on one SRAM (drives the PMU schedule)."""
+                        profiles: Sequence[OperationProfile],
+                        phase_groups: Sequence[tuple[str, Sequence[str]]]
+                        | None = None) -> list[PhaseRequirement]:
+    """Per-phase byte demand on one SRAM (drives the PMU schedule).
+
+    ``phase_groups`` -- ``(phase_name, covered profile names)`` pairs from
+    an ``ExecutionPlan`` -- merges the dataflow operations a fused kernel
+    executes as ONE phase into one gating phase (peak demand over the
+    members, summed duration), so the schedule scores what actually runs.
+    Without groups every profile is its own phase (the paper's model).
+    """
     kind = org.name.removeprefix("PG-")
-    reqs = []
+    per_op: dict[str, tuple[float, float]] = {}
     for op in profiles:
         if kind == "SMP":
             need = op.total_mem
@@ -178,13 +187,25 @@ def _phase_requirements(org: MemoryOrg, sram_name: str,
             else:
                 need = min(op.component(sram_name),
                            org.sram(sram_name).capacity_bytes)
-        reqs.append(PhaseRequirement(name=op.name, required_bytes=need,
-                                     duration_cycles=op.total_cycles))
+        per_op[op.name] = (need, op.total_cycles)
+    if phase_groups is None:
+        phase_groups = tuple((op.name, (op.name,)) for op in profiles)
+    reqs = []
+    for phase_name, members in phase_groups:
+        reqs.append(PhaseRequirement(
+            name=phase_name,
+            required_bytes=max(per_op[m][0] for m in members),
+            duration_cycles=sum(per_op[m][1] for m in members)))
     return reqs
 
 
-def evaluate(org: MemoryOrg,
-             profiles: Sequence[OperationProfile]) -> OrgEvaluation:
+def evaluate(org: MemoryOrg, profiles: Sequence[OperationProfile], *,
+             phase_groups: Sequence[tuple[str, Sequence[str]]] | None = None
+             ) -> OrgEvaluation:
+    """Score ``org``: dynamic energy from the per-operation access counts,
+    static/wakeup from the PMU gating schedule.  ``phase_groups`` (see
+    ``_phase_requirements``) gates over fused executed phases instead of
+    one phase per dataflow operation."""
     dyn = {s.name: 0.0 for s in org.srams}
     per_op = {op.name: 0.0 for op in profiles}
 
@@ -208,14 +229,17 @@ def evaluate(org: MemoryOrg,
     schedules = []
     per_sram = []
     for s in org.srams:
-        sched = build_schedule(s, _phase_requirements(org, s.name, profiles))
+        sched = build_schedule(s, _phase_requirements(org, s.name, profiles,
+                                                      phase_groups))
         schedules.append(sched)
         per_sram.append(SramEnergy(
             name=s.name, dynamic_mj=dyn[s.name],
             static_mj=sched.static_mj, wakeup_mj=sched.wakeup_mj,
             area_mm2=s.area_mm2()))
         for ph in sched.phases:
-            per_op[ph.name] += ph.leakage_mj + ph.wakeup_mj
+            # fused phases carry the plan-op name, not a profile name
+            per_op[ph.name] = (per_op.get(ph.name, 0.0)
+                               + ph.leakage_mj + ph.wakeup_mj)
 
     return OrgEvaluation(org=org, per_sram=tuple(per_sram),
                          per_op_mj=per_op, schedules=tuple(schedules))
@@ -314,15 +338,19 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
 
     The profiles default to those of an ``ExecutionPlan`` compiled for the
     paper's CapsuleNet -- i.e. the PMU/energy schedule scored here is the
-    SAME schedule the Pallas kernels execute.  Pass ``plan=`` to score a
-    differently-shaped network, or raw ``profiles`` for ablations.
+    SAME schedule the Pallas kernels execute, gated over the plan's FUSED
+    phases (``plan.phase_groups()``: the votes+routing megakernel is one
+    phase).  Pass ``plan=`` to score a differently-shaped network, or raw
+    ``profiles`` for paper-model ablations (one phase per operation).
     """
+    phase_groups = None
     if profiles is None:
         if plan is None:
             from repro.core import execplan
             from repro.core.capsnet import CapsNetConfig
             plan = execplan.compile_plan(CapsNetConfig())
         profiles = plan.profiles
+        phase_groups = plan.phase_groups()
     elif plan is not None:
         raise ValueError("pass either profiles or plan, not both")
     profiles = list(profiles)
@@ -339,7 +367,7 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
             if key in seen:
                 continue
             seen.add(key)
-            ev = evaluate(org, profiles)
+            ev = evaluate(org, profiles, phase_groups=phase_groups)
             results.append(DSEResult(org_name=name, sectors=sectors if pg else 1,
                                      total_mj=ev.total_mj, area_mm2=ev.area_mm2,
                                      evaluation=ev))
@@ -353,5 +381,7 @@ def best_design(profiles: Sequence[OperationProfile] | None = None,
 
 
 def evaluate_plan(org: MemoryOrg, plan) -> OrgEvaluation:
-    """Score ``org`` against the schedule of an ``ExecutionPlan``."""
-    return evaluate(org, plan.profiles)
+    """Score ``org`` against the schedule of an ``ExecutionPlan``: the
+    dataflow access counts with the gating schedule built over the plan's
+    fused executed phases (``plan.phase_groups()``)."""
+    return evaluate(org, plan.profiles, phase_groups=plan.phase_groups())

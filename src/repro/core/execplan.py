@@ -23,18 +23,24 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Sequence
 
 from repro.core import analysis
 from repro.core.analysis import CapsNetDims, OperationProfile
 from repro.core.capsnet import CapsNetConfig
-from repro.core.planner import (VMEM_BYTES, BlockPlan, MatmulWorkload,
+from repro.core.planner import (MXU, VMEM_BYTES, BlockPlan, MatmulWorkload,
                                 plan_matmul)
 from repro.core.pmu import PhaseRequirement
 
 # Kernels run in fp32 (interpret-mode validated; fp32 accumulation on TPU).
 ELEM_BYTES = 4
 SQUASH_BLOCK_ROWS = 1024
+
+# The fused ClassCaps megakernel: ONE plan op / PMU phase covering the
+# dataflow model's ClassCaps-FC + Sum+Squash + Update+Sum operations.
+FUSED_NAME = "ClassCaps-Routing"
+FUSED_COVERS = ("ClassCaps-FC", "Sum+Squash", "Update+Sum")
 
 
 class PlanError(ValueError):
@@ -47,11 +53,18 @@ class OpPlan:
 
     ``kernel`` names the executor -- all Pallas: ``conv_im2col``
     (optionally ``+squash`` when the primary-capsule activation fuses into
-    the epilogue), ``caps_votes``, and ``routing``.  Matmul-view operations
-    carry the planner's energy-argmin ``block``; its ``block_m/k/n`` (conv)
-    and ``block_i`` / ``block_rows`` are the concrete grid tiles the kernel
-    wrappers consume.  ``requirement`` is the PMU phase (ASIC dataflow-model
-    bytes/cycles) the gating schedule is built from.
+    the epilogue) and the fused ``votes_routing`` megakernel.  Matmul-view
+    operations carry the planner's energy-argmin ``block``; its
+    ``block_m/k/n`` (conv) and ``block_i`` / ``block_rows`` are the
+    concrete grid tiles the kernel wrappers consume.  ``requirement`` is
+    the PMU phase (ASIC dataflow-model bytes/cycles) the gating schedule
+    is built from; a fused op covers several dataflow-model operations
+    (``profiles``) with ONE phase -- the schedule it actually executes.
+
+    ``mode`` is the fused kernel's plan-chosen schedule (``resident`` /
+    ``streamed``); ``hbm_bytes`` is the op's modeled HBM traffic per
+    forward at the plan batch and ``uhat_hbm_bytes`` the share of it spent
+    on the votes intermediate (0 for the fused kernel -- the point).
     """
 
     name: str
@@ -61,9 +74,17 @@ class OpPlan:
     vmem_bytes: int
     est_cycles: float
     requirement: PhaseRequirement
-    profile: OperationProfile
+    profiles: tuple[OperationProfile, ...]
     block_i: int | None = None
     block_rows: int | None = None
+    mode: str | None = None
+    hbm_bytes: float | None = None
+    uhat_hbm_bytes: float | None = None
+
+    @property
+    def profile(self) -> OperationProfile:
+        """The primary dataflow profile (first of ``profiles``)."""
+        return self.profiles[0]
 
     @property
     def fuses_squash(self) -> bool:
@@ -88,12 +109,27 @@ class ExecutionPlan:
 
     @property
     def profiles(self) -> tuple[OperationProfile, ...]:
-        """The dataflow profiles this plan was compiled from (feeds dse)."""
-        return tuple(op.profile for op in self.ops)
+        """The dataflow profiles this plan was compiled from (feeds dse).
+
+        Fused ops contribute every profile they cover, so this is always
+        the full five-operation paper model regardless of fusion.
+        """
+        return tuple(p for op in self.ops for p in op.profiles)
 
     def phase_requirements(self) -> tuple[PhaseRequirement, ...]:
-        """Per-operation PMU phases, in execution order."""
+        """Per-operation PMU phases, in execution order.
+
+        One phase per EXECUTED op: the fused ClassCaps megakernel is a
+        single phase, so the gating schedule scores what actually runs.
+        """
         return tuple(op.requirement for op in self.ops)
+
+    def phase_groups(self) -> tuple[tuple[str, tuple[str, ...]], ...]:
+        """(phase_name, covered profile names) per executed op -- lets the
+        organization DSE (``dse.evaluate_plan``) gate over the fused
+        phases the kernels execute instead of the raw five-op model."""
+        return tuple((op.name, tuple(p.name for p in op.profiles))
+                     for op in self.ops)
 
     @property
     def peak_vmem_bytes(self) -> int:
@@ -106,12 +142,16 @@ class ExecutionPlan:
         names = [op.name for op in self.ops]
         if len(set(names)) != len(names):
             raise PlanError(f"duplicate operation names: {names}")
+        covered = [p.name for op in self.ops for p in op.profiles]
         expected = [p.name for p in
                     analysis.capsnet_profiles(self.dataflow,
                                               analysis.dims_from_config(self.cfg))]
-        if names != expected:
-            raise PlanError(f"phases {names} do not cover operations {expected}")
+        if covered != expected:
+            raise PlanError(
+                f"phases {names} cover {covered}, not operations {expected}")
         for op in self.ops:
+            if op.mode is not None and op.mode not in ("resident", "streamed"):
+                raise PlanError(f"{op.name}: unknown mode {op.mode!r}")
             if op.vmem_bytes > self.vmem_budget:
                 raise PlanError(
                     f"{op.name}: VMEM footprint {op.vmem_bytes} exceeds "
@@ -136,8 +176,11 @@ class ExecutionPlan:
                        if op.block else None),
                 block_i=op.block_i,
                 block_rows=op.block_rows,
+                mode=op.mode,
                 vmem_kib=op.vmem_bytes / 1024,
                 est_cycles=op.est_cycles,
+                hbm_bytes=op.hbm_bytes,
+                uhat_hbm_bytes=op.uhat_hbm_bytes,
                 req_kib=op.requirement.required_bytes / 1024,
                 duration_cycles=op.requirement.duration_cycles,
             ))
@@ -169,31 +212,140 @@ def _votes_max_batch(caps_dim: int, out_dim: int, vmem_budget: int) -> int:
     return max((vmem_budget - fixed) // per_batch, 0)
 
 
-def _votes_block_i(dims: CapsNetDims, batch: int, vmem_budget: int
-                   ) -> tuple[MatmulWorkload, BlockPlan, int]:
-    """Planner pick for the caps-votes i-tile, shrunk to fit the budget.
-
-    The kernel supports ragged final i-blocks (grid = cdiv), so the planned
-    block is only clamped to the capsule count -- never collapsed to 1 for
-    non-power-of-two counts.  Raises ``PlanError`` when even ``block_i=1``
-    exceeds the budget (instead of letting ``validate()`` fail later with a
-    generic footprint message).
-    """
-    out_dim = dims.num_classes * dims.class_dim
-    wl = MatmulWorkload(m=dims.num_primary, k=dims.primary_dim, n=out_dim)
+def _votes_block_i_raw(num_caps: int, caps_dim: int, out_dim: int,
+                       batch: int, vmem_budget: int) -> int:
+    """Split-path caps-votes i-tile: planner pick shrunk to the budget at
+    the REAL batch (the memoized plan-less wrapper in ``kernels/ops.py``
+    shares this, so a batched call can no longer exceed the footprint the
+    planner guarantees).  Raises ``PlanError`` when even ``block_i=1``
+    exceeds the budget (instead of letting ``validate()`` fail later with
+    a generic footprint message)."""
+    wl = MatmulWorkload(m=num_caps, k=caps_dim, n=out_dim)
     block = plan_matmul(wl, vmem_budget)
-    bi = max(min(block.block_m, dims.num_primary), 1)
-    while bi > 1 and _votes_vmem(batch, bi, dims.primary_dim,
-                                 out_dim) > vmem_budget:
+    bi = max(min(block.block_m, num_caps), 1)
+    while bi > 1 and _votes_vmem(batch, bi, caps_dim, out_dim) > vmem_budget:
         bi //= 2
-    need = _votes_vmem(batch, bi, dims.primary_dim, out_dim)
+    need = _votes_vmem(batch, bi, caps_dim, out_dim)
     if need > vmem_budget:
         raise PlanError(
             f"ClassCaps-FC: no feasible schedule at batch={batch}: even "
             f"block_i=1 needs {need} B of VMEM, over the {vmem_budget} B "
             f"budget; largest feasible batch is "
-            f"{_votes_max_batch(dims.primary_dim, out_dim, vmem_budget)}")
-    return wl, block, bi
+            f"{_votes_max_batch(caps_dim, out_dim, vmem_budget)}")
+    return bi
+
+
+# ---------------------------------------------------------------------------
+# Fused votes+routing schedule (the megakernel's resident-vs-streamed DSE)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VotesRoutingSchedule:
+    """Plan decision for the fused ``votes_routing`` megakernel."""
+
+    mode: str                # "resident" | "streamed"
+    block_i: int
+    vmem_bytes: int          # footprint of the CHOSEN schedule
+    n_passes: int            # W streams: 1 resident, 2*iters+1 streamed
+    workload: MatmulWorkload
+
+
+def _i_padded(num_caps: int, block_i: int) -> int:
+    return math.ceil(num_caps / block_i) * block_i
+
+
+def _fused_resident_vmem(batch: int, num_caps: int, block_i: int,
+                         caps_dim: int, jd: int, j: int) -> int:
+    """Resident schedule: the full votes tensor + routing logits live in
+    VMEM scratch while double-buffered u/W i-tiles stream past once; each
+    grid step also materializes one [B, block_i, J*D] votes block before
+    storing it into the scratch."""
+    i_pad = _i_padded(num_caps, block_i)
+    votes = batch * i_pad * jd
+    logits = batch * i_pad * j
+    tiles = 2 * (batch * block_i * caps_dim + block_i * jd * caps_dim)
+    uh_block = batch * block_i * jd
+    out = batch * jd
+    return (votes + logits + tiles + uh_block + out) * ELEM_BYTES
+
+
+def _fused_streamed_vmem(batch: int, num_caps: int, block_i: int,
+                         caps_dim: int, jd: int, j: int) -> int:
+    """Streamed schedule: only u (fetched once), the logits, and the s/v
+    candidates stay resident; W tiles stream (double-buffered) each pass,
+    and every step recomputes one [B, block_i, J*D] votes block."""
+    i_pad = _i_padded(num_caps, block_i)
+    u_res = batch * i_pad * caps_dim
+    logits = batch * i_pad * j
+    w_tile = 2 * block_i * jd * caps_dim
+    uh_block = batch * block_i * jd
+    sv = 2 * batch * jd
+    out = batch * jd
+    return (u_res + logits + w_tile + uh_block + sv + out) * ELEM_BYTES
+
+
+def plan_votes_routing(num_caps: int, caps_dim: int, jd: int, j: int, *,
+                       batch: int = 1, iters: int = 3,
+                       vmem_budget: int = VMEM_BYTES) -> VotesRoutingSchedule:
+    """Resident-vs-streamed decision for the fused megakernel.
+
+    Prefer **resident** (votes computed once into scratch, routing
+    iterates on-chip -- the split path's behavior minus the u_hat HBM
+    round-trip); fall back to **streamed** (votes recomputed from
+    re-streamed W tiles each pass) when the votes tensor cannot fit the
+    budget at any i-tile.  Raises ``PlanError`` only when even streamed
+    ``block_i=1`` exceeds the budget -- the point where no schedule can
+    keep the routing state on-chip at this batch.
+    """
+    wl = MatmulWorkload(m=num_caps, k=caps_dim, n=jd, in_bytes=ELEM_BYTES)
+    # Tile-shape pick only (our per-mode footprint model is what is held
+    # to the budget, not the generic double-buffered matmul model).
+    bi0 = max(min(plan_matmul(wl).block_m, num_caps), 1)
+
+    bi = bi0
+    while bi > 1 and _fused_resident_vmem(batch, num_caps, bi, caps_dim,
+                                          jd, j) > vmem_budget:
+        bi //= 2
+    need = _fused_resident_vmem(batch, num_caps, bi, caps_dim, jd, j)
+    if need <= vmem_budget:
+        return VotesRoutingSchedule(mode="resident", block_i=bi,
+                                    vmem_bytes=need, n_passes=1, workload=wl)
+
+    bi = bi0
+    while bi > 1 and _fused_streamed_vmem(batch, num_caps, bi, caps_dim,
+                                          jd, j) > vmem_budget:
+        bi //= 2
+    need = _fused_streamed_vmem(batch, num_caps, bi, caps_dim, jd, j)
+    if need > vmem_budget:
+        raise PlanError(
+            f"{FUSED_NAME}: no feasible schedule at batch={batch}: even "
+            f"streamed block_i=1 needs {need} B of VMEM, over the "
+            f"{vmem_budget} B budget")
+    return VotesRoutingSchedule(mode="streamed", block_i=bi, vmem_bytes=need,
+                                n_passes=2 * iters + 1, workload=wl)
+
+
+def votes_routing_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
+                            jd: int, n_passes: int) -> float:
+    """Modeled HBM traffic of the fused megakernel per forward: u read
+    once, W streamed ``n_passes`` times, v written once -- and NO u_hat
+    term (the tensor never exists off-chip)."""
+    u = batch * num_caps * caps_dim
+    w = num_caps * jd * caps_dim * n_passes
+    v = batch * jd
+    return float((u + w + v) * ELEM_BYTES)
+
+
+def split_votes_routing_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
+                                  jd: int) -> tuple[float, float]:
+    """(total, u_hat share) of the split ``caps_votes`` -> ``routing``
+    path: the votes tensor is written by one kernel and read back by the
+    next -- the produce-once/consume-once round-trip the fusion kills."""
+    u = batch * num_caps * caps_dim
+    w = num_caps * jd * caps_dim
+    v = batch * jd
+    uhat = 2 * batch * num_caps * jd                 # write + read back
+    return float((u + w + v + uhat) * ELEM_BYTES), float(uhat * ELEM_BYTES)
 
 
 def _conv_patch_vmem(in_hw: int, cin: int, k: int, out_hw: int) -> int:
@@ -204,13 +356,30 @@ def _conv_patch_vmem(in_hw: int, cin: int, k: int, out_hw: int) -> int:
     return image + patches
 
 
-def _routing_vmem(dims: CapsNetDims) -> int:
-    """Fused routing footprint per grid step (one batch element)."""
-    jd = dims.num_classes * dims.class_dim
-    votes = dims.num_primary * jd * ELEM_BYTES
-    logits = dims.num_primary * dims.num_classes * ELEM_BYTES
-    out = jd * ELEM_BYTES
-    return votes + logits + out
+def _fused_requirement(dims: CapsNetDims,
+                       profs: Sequence[OperationProfile],
+                       sched: VotesRoutingSchedule) -> PhaseRequirement:
+    """ONE PMU phase for the fused megakernel, honest per mode.
+
+    Resident keeps the ClassCaps votes in the accumulator memory across
+    routing, so the phase demand is the peak of the three covered
+    dataflow operations.  Streamed never materializes the votes: the
+    demand is u + logits/couplings + the W prefetch buffer + the s/v
+    candidates (dataflow-model byte widths).
+    """
+    cc, ss, us = profs
+    duration = cc.total_cycles + ss.total_cycles + us.total_cycles
+    if sched.mode == "resident":
+        req = max(cc.total_mem, ss.total_mem, us.total_mem)
+    else:
+        bij = dims.num_primary * dims.num_classes
+        jd = dims.num_classes * dims.class_dim
+        req = (cc.data_mem                                    # u resident
+               + bij * (analysis.ACC_BYTES + analysis.ACT_BYTES)  # b + c
+               + cc.weight_mem                                # W prefetch
+               + 4 * jd * analysis.ACC_BYTES)                 # s/v temps
+    return PhaseRequirement(name=FUSED_NAME, required_bytes=req,
+                            duration_cycles=duration)
 
 
 @functools.lru_cache(maxsize=64)
@@ -227,13 +396,18 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
                             block_m/k/n tiles; PrimaryCaps fuses the squash
                             activation into the epilogue when its n-tile is
                             capsule-aligned)
-      ClassCaps-FC       -> ``caps_votes`` kernel (plan-chosen i-tile)
+      ClassCaps-FC,
       Sum+Squash,
-      Update+Sum         -> ONE fused ``routing`` kernel (all iterations
-                            in VMEM -- the paper's on-chip-resident loop)
+      Update+Sum         -> ONE fused ``votes_routing`` megakernel (votes
+                            from streamed W i-blocks + every routing
+                            iteration in VMEM scratch -- u_hat never
+                            touches HBM; ``plan_votes_routing`` picks the
+                            resident or streamed schedule per config)
 
     ``requirement``s (PMU phases) keep the paper's per-inference dataflow
-    model; ``vmem_bytes`` scale with ``batch`` where the kernel batches.
+    model -- one phase per EXECUTED op, so the fused megakernel is scored
+    as the single phase it runs; ``vmem_bytes`` scale with ``batch``
+    where the kernel batches.
     """
     dims = analysis.dims_from_config(cfg)
     profiles = analysis.capsnet_profiles(dataflow, dims)
@@ -268,7 +442,8 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
                     vmem_bytes=max(block.vmem_total + bias_tile,
                                    conv_patch[name]),
                     est_cycles=block.est_cycles,
-                    requirement=_requirement(prof), profile=prof)
+                    requirement=_requirement(prof), profiles=(prof,),
+                    hbm_bytes=block.hbm_bytes)
         if name == "PrimaryCaps":
             # The primary-capsule squash activation rides on this op: fused
             # into the matmul epilogue when every n-tile holds whole
@@ -285,26 +460,28 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
                                    * ELEM_BYTES))
         ops.append(op)
 
-    prof = by_name["ClassCaps-FC"]
-    wl, block, block_i = _votes_block_i(dims, batch, vmem_budget)
+    # ClassCaps head: ONE fused votes+routing megakernel.  The resident
+    # schedule is the split path minus the u_hat HBM round-trip; streamed
+    # recomputes the votes from re-streamed W tiles when they cannot fit.
+    fused_profs = tuple(by_name[n] for n in FUSED_COVERS)
+    jd = dims.num_classes * dims.class_dim
+    sched = plan_votes_routing(dims.num_primary, dims.primary_dim, jd,
+                               dims.num_classes, batch=batch,
+                               iters=dims.routing_iters,
+                               vmem_budget=vmem_budget)
+    votes_cycles = sched.workload.flops / (2 * MXU * MXU)
+    routing_cycles = sum(p.total_cycles for p in fused_profs[1:])
     ops.append(OpPlan(
-        name="ClassCaps-FC", kernel="caps_votes", workload=wl, block=block,
-        block_i=block_i,
-        vmem_bytes=_votes_vmem(batch, block_i, dims.primary_dim, wl.n),
-        est_cycles=block.est_cycles, requirement=_requirement(prof),
-        profile=prof))
-
-    routing_bytes = _routing_vmem(dims)
-    if routing_bytes > vmem_budget:
-        raise PlanError(
-            f"fused routing state ({routing_bytes} B) exceeds the VMEM "
-            f"budget ({vmem_budget} B); no resident schedule exists")
-    for name in ("Sum+Squash", "Update+Sum"):
-        prof = by_name[name]
-        ops.append(OpPlan(
-            name=name, kernel="routing", workload=None, block=None,
-            vmem_bytes=routing_bytes, est_cycles=prof.total_cycles,
-            requirement=_requirement(prof), profile=prof))
+        name=FUSED_NAME, kernel="votes_routing", workload=sched.workload,
+        block=None, block_i=sched.block_i, mode=sched.mode,
+        vmem_bytes=sched.vmem_bytes,
+        est_cycles=votes_cycles * sched.n_passes + routing_cycles,
+        hbm_bytes=votes_routing_hbm_bytes(batch, dims.num_primary,
+                                          dims.primary_dim, jd,
+                                          sched.n_passes),
+        uhat_hbm_bytes=0.0,
+        requirement=_fused_requirement(dims, fused_profs, sched),
+        profiles=fused_profs))
 
     plan = ExecutionPlan(cfg=cfg, batch=batch, dataflow=dataflow,
                          vmem_budget=vmem_budget, ops=tuple(ops))

@@ -70,7 +70,10 @@ def schedule_from_plan(memory: SRAMConfig, plan) -> PMUSchedule:
     ``plan`` is any object with a ``phase_requirements()`` method (see
     ``repro.core.execplan.ExecutionPlan``); this is the path by which the
     gating model scores the SAME per-operation schedule the kernels
-    execute, instead of a hand-built phase list.
+    execute, instead of a hand-built phase list.  The plan emits one
+    phase per EXECUTED kernel, so a fused op (the votes+routing
+    megakernel) is gated as the single phase it actually runs -- no
+    spurious sector transitions at fused-away operation boundaries.
     """
     return build_schedule(memory, plan.phase_requirements())
 

@@ -7,6 +7,10 @@ for a reuse-free operand is (1) stream it through VMEM in blocks big enough
 to saturate HBM (the paper's weight-memory prefetch buffer) and (2) keep
 the *reused* operands (u: the data memory, accumulator tile) resident.
 
+The plan-driven path no longer materializes u_hat at all --
+``kernels/votes_routing.py`` fuses this operation into the routing loop.
+This kernel survives as the split-path oracle/fallback.
+
 Block layout per grid step (i-block `bi` of size TI):
     data memory   : u tile   [B, TI, C]      (reused across all N outputs)
     weight memory : W tile   [TI, N, C]      (streamed, read once)

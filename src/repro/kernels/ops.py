@@ -14,7 +14,8 @@ import functools
 
 import jax
 
-from repro.core.planner import MatmulWorkload, plan_matmul
+from repro.core import execplan
+from repro.core.planner import VMEM_BYTES, MatmulWorkload, plan_matmul
 from repro.kernels import ref
 from repro.kernels.caps_votes import caps_votes as _caps_votes
 from repro.kernels.conv_im2col import conv2d_im2col as _conv2d
@@ -22,6 +23,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.routing import routing as _routing
 from repro.kernels.squash import squash as _squash
+from repro.kernels.votes_routing import votes_routing as _votes_routing
 
 
 @functools.lru_cache(maxsize=64)            # m folds in the batch: bounded
@@ -58,26 +60,31 @@ def conv2d(x, w, b, *, stride: int = 1, plan_op=None, epilogue: str = "none",
                    interpret=interpret)
 
 
-@functools.lru_cache(maxsize=None)
-def planned_block_i(num_caps: int, caps_dim: int, out_dim: int) -> int:
-    """CapStore planner pick for the caps-votes i-tile (memoized).
+@functools.lru_cache(maxsize=64)                    # bounded: was unbounded
+def planned_block_i(num_caps: int, caps_dim: int, out_dim: int,
+                    batch: int = 1, vmem_budget: int = VMEM_BYTES) -> int:
+    """CapStore planner pick for the split caps-votes i-tile (memoized).
 
-    The kernel handles ragged final i-blocks, so the planned block is only
-    clamped to ``num_caps`` -- it no longer degenerates to 1 for
-    non-power-of-two capsule counts.
+    Shares ``execplan._votes_block_i_raw``: the planner block is shrunk
+    until the kernel's footprint at the REAL ``batch`` fits the budget
+    (the old pick ignored batch, so a batched call could exceed the
+    footprint the planner guarantees), and only clamped to ``num_caps``
+    -- never degenerating to 1 for non-power-of-two capsule counts.
     """
-    plan = plan_matmul(MatmulWorkload(m=num_caps, k=caps_dim, n=out_dim))
-    return max(min(plan.block_m, num_caps), 1)
+    return execplan._votes_block_i_raw(num_caps, caps_dim, out_dim,
+                                       batch, vmem_budget)
 
 
 def caps_votes(u: jax.Array, w: jax.Array, *, plan=None,
                block_i: int | None = None, interpret: bool = True) -> jax.Array:
-    """u: [B, I, C], w: [I, N, C] -> [B, I, N]."""
+    """u: [B, I, C], w: [I, N, C] -> [B, I, N] (split-path oracle/fallback;
+    the plan executes the fused ``votes_routing`` instead)."""
     if block_i is None:
         if plan is not None:
-            block_i = plan.op("ClassCaps-FC").block_i
+            block_i = plan.op(execplan.FUSED_NAME).block_i
         else:
-            block_i = planned_block_i(u.shape[1], u.shape[2], w.shape[1])
+            block_i = planned_block_i(u.shape[1], u.shape[2], w.shape[1],
+                                      u.shape[0])
     return _caps_votes(u, w, block_i=block_i, interpret=interpret)
 
 
@@ -90,6 +97,50 @@ def routing(u_hat: jax.Array, *, plan=None, iters: int | None = None,
         num_classes = plan.cfg.num_classes if plan is not None else 10
     return _routing(u_hat, iters=iters, num_classes=num_classes,
                     interpret=interpret)
+
+
+@functools.lru_cache(maxsize=64)
+def planned_votes_routing(num_caps: int, caps_dim: int, jd: int,
+                          num_classes: int, iters: int, batch: int,
+                          vmem_budget: int = VMEM_BYTES) -> tuple[str, int]:
+    """Memoized (mode, block_i) decision for the fused megakernel."""
+    sched = execplan.plan_votes_routing(num_caps, caps_dim, jd, num_classes,
+                                        batch=batch, iters=iters,
+                                        vmem_budget=vmem_budget)
+    return sched.mode, sched.block_i
+
+
+def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
+                  iters: int | None = None, num_classes: int | None = None,
+                  mode: str | None = None, block_i: int | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """u: [B, I, C], w: [I, J*D, C] -> v: [B, J*D]: fused votes + routing
+    (u_hat never leaves the chip).  Schedule (``mode``/``block_i``) comes
+    from ``plan.op("ClassCaps-Routing")`` or the memoized plan decision."""
+    if iters is None:
+        iters = plan.cfg.routing_iters if plan is not None else 3
+    if num_classes is None:
+        num_classes = plan.cfg.num_classes if plan is not None else 10
+    if mode is None or block_i is None:
+        if plan is not None:
+            if u.shape[0] > plan.batch:
+                # A bigger batch than planned would scale the VMEM scratch
+                # past the footprint the plan validated (smaller is safe:
+                # the footprint is an upper bound).
+                raise ValueError(
+                    f"votes_routing: batch {u.shape[0]} exceeds the plan's "
+                    f"batch {plan.batch}; recompile the plan for this batch")
+            op = plan.op(execplan.FUSED_NAME)
+            mode = mode or op.mode
+            block_i = block_i or op.block_i
+        else:
+            pmode, pbi = planned_votes_routing(
+                u.shape[1], u.shape[2], w.shape[1], num_classes, iters,
+                u.shape[0])
+            mode = mode or pmode
+            block_i = block_i or pbi
+    return _votes_routing(u, w, iters=iters, num_classes=num_classes,
+                          mode=mode, block_i=block_i, interpret=interpret)
 
 
 def squash(x: jax.Array, *, plan=None, block_rows: int | None = None,
@@ -114,5 +165,6 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                   interpret=interpret)
 
 
-__all__ = ["conv2d", "caps_votes", "routing", "squash", "rmsnorm",
-           "flash_attention", "planned_block_i", "planned_conv_blocks", "ref"]
+__all__ = ["conv2d", "caps_votes", "routing", "votes_routing", "squash",
+           "rmsnorm", "flash_attention", "planned_block_i",
+           "planned_conv_blocks", "planned_votes_routing", "ref"]

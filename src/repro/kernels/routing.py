@@ -1,17 +1,20 @@
-"""Fused routing-by-agreement kernel -- the CapStore policy on TPU.
+"""Fused routing-by-agreement kernel (legacy split-path fallback/oracle).
 
 The paper's key memory observation: during the routing iterations *no value
 leaves the chip* (Sec. 3.1 -- "all the values that have to be saved during
 the routing-by-agreement are stored on-chip").  The TPU translation: run
 ALL routing iterations inside one ``pallas_call`` so the routing state
-(logits b, couplings c, candidate outputs s/v) lives in VMEM scratch for
-the whole loop, and only the votes (read once) and the final v (written
-once) cross HBM.
+(logits b, couplings c, candidate outputs s/v) lives on-chip for the whole
+loop, and only the votes (read once) and the final v (written once) cross
+HBM.  The plan-driven path goes further: ``kernels/votes_routing.py``
+fuses the vote computation in as well, so the votes themselves never
+round-trip through HBM -- this kernel survives as the split-path
+oracle/fallback consuming a materialized ``u_hat``.
 
 VMEM budget per grid step (one batch element):
     votes  [I, J*D]  : the "accumulator memory" contents (fp32)
-    b      [I, J]    : routing logits     (scratch)
-    v      [J*D]     : squashed output    (scratch, stored as [1, J*D])
+    b      [I, J]    : routing logits     (loop carry)
+    v      [J*D]     : squashed output    (stored as [1, J*D])
 
 For CapsuleNet-MNIST (I=1152, J=10, D=16) that is ~0.8 MiB -- comfortably
 inside the 16 MiB VMEM envelope the planner manages.
@@ -24,12 +27,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.capsnet import squash
 
 
-def _routing_kernel(uhat_ref, o_ref, b_scr, *, iters: int, j: int, d: int):
+def _routing_kernel(uhat_ref, o_ref, *, iters: int, j: int, d: int):
     uh = uhat_ref[0].astype(jnp.float32)                  # [I, J*D]
     i_dim = uh.shape[0]
     uh4 = uh.reshape(i_dim, j, d)
@@ -42,7 +44,6 @@ def _routing_kernel(uhat_ref, o_ref, b_scr, *, iters: int, j: int, d: int):
 
     b = jax.lax.fori_loop(0, iters, iteration,
                           jnp.zeros((i_dim, j), jnp.float32))
-    b_scr[...] = b                                        # state stays in VMEM
     c = jax.nn.softmax(b, axis=1)
     v = squash(jnp.einsum("ij,ijd->jd", c, uh4))
     o_ref[...] = v.reshape(1, j * d).astype(o_ref.dtype)
@@ -65,6 +66,5 @@ def routing(u_hat: jax.Array, *, iters: int = 3, num_classes: int = 10,
         in_specs=[pl.BlockSpec((1, i_dim, jd), lambda b: (b, 0, 0))],
         out_specs=pl.BlockSpec((1, jd), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, jd), u_hat.dtype),
-        scratch_shapes=[pltpu.VMEM((i_dim, j), jnp.float32)],
         interpret=interpret,
     )(u_hat)

@@ -1,0 +1,195 @@
+"""Fused ClassCaps votes + routing megakernel: u_hat never touches HBM.
+
+CapStore's central claim (Sec. 3.1) is that no routing value leaves the
+chip.  The split Pallas path still violated it on TPU: ``caps_votes``
+wrote the votes tensor ``u_hat [B, I, J*D]`` -- the single largest
+intermediate of the network -- to HBM and ``routing`` immediately read it
+back, a produce-once/consume-once round-trip dominating the traffic of
+the memory-bound ClassCaps stage (CapsAcc: zero weight reuse, so bytes
+moved, not FLOPs, are the lever).  This kernel computes the votes from
+the u-tile and streamed ``W`` i-blocks and runs ALL routing iterations
+with the routing state (logits ``b``, couplings ``c``, candidates
+``s``/``v``) in VMEM scratch, so per forward only ``u [B, I, C]`` and
+``W [I, J*D, C]`` are read and only ``v [B, J*D]`` is written.
+
+The ExecutionPlan (``repro.core.execplan.plan_votes_routing``) chooses
+between two schedules per configuration -- the DESCNet-style
+per-configuration scratchpad decision:
+
+  resident  grid ``(num_i_blocks,)``.  Each step computes one i-block of
+            votes for the whole batch into a ``[B, I_pad, J*D]`` VMEM
+            scratch; the last step runs every routing iteration on-chip.
+            ``W`` and ``u`` are read exactly once.  Requires the full
+            votes tensor to fit VMEM.
+
+  streamed  grid ``(2*iters + 1, num_i_blocks)``.  Only ``u`` (constant
+            index map: fetched once) and the routing state stay resident;
+            votes are recomputed from streamed ``W`` tiles on every pass.
+            Even-numbered passes accumulate ``s`` (and squash into ``v``
+            at the last i-block); odd passes update the logits ``b``.
+            ``W`` is re-read ``2*iters + 1`` times -- the price of making
+            num_primary >> VMEM configurations feasible at all.
+
+Both schedules zero-pad the capsule axis up to a multiple of ``block_i``
+(the ``conv_im2col`` K-axis idiom): a clamped ragged tail block would
+double-count rows under the i-reduction, while zero rows contribute
+nothing to ``s``, leave their logits at the uniform initialisation, and
+never perturb the real capsules.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.capsnet import squash
+
+MODES = ("resident", "streamed")
+
+
+def _votes_block(u, w):
+    """u: [B, TI, C], w: [TI, N, C] -> u_hat block [B, TI, N] (fp32)."""
+    return jnp.einsum("bic,inc->bin", u.astype(jnp.float32),
+                      w.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def _routing_iterations(uh4, iters: int):
+    """All routing iterations on resident votes uh4 [B, I, J, D] -> v."""
+    bsz, i_dim, j, _ = uh4.shape
+
+    def iteration(_, b):
+        c = jax.nn.softmax(b, axis=2)                 # couplings  [B, I, J]
+        v = squash(jnp.einsum("bij,bijd->bjd", c, uh4))
+        return b + jnp.einsum("bijd,bjd->bij", uh4, v)
+
+    b = jax.lax.fori_loop(0, iters, iteration,
+                          jnp.zeros((bsz, i_dim, j), jnp.float32))
+    c = jax.nn.softmax(b, axis=2)
+    return squash(jnp.einsum("bij,bijd->bjd", c, uh4))  # [B, J, D]
+
+
+def _resident_kernel(u_ref, w_ref, o_ref, votes_scr, *, iters: int, j: int,
+                     d: int, n_blocks: int, block_i: int):
+    ib = pl.program_id(0)
+    votes_scr[:, pl.ds(ib * block_i, block_i), :] = _votes_block(
+        u_ref[...], w_ref[...])
+
+    @pl.when(ib == n_blocks - 1)
+    def _():
+        bsz, i_pad, jd = votes_scr.shape
+        v = _routing_iterations(votes_scr[...].reshape(bsz, i_pad, j, d),
+                                iters)
+        o_ref[...] = v.reshape(bsz, j * d).astype(o_ref.dtype)
+
+
+def _streamed_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *, iters: int,
+                     j: int, d: int, n_blocks: int, block_i: int,
+                     n_passes: int):
+    del iters  # folded into n_passes = 2*iters + 1
+    p = pl.program_id(0)
+    ib = pl.program_id(1)
+    row0 = ib * block_i
+    bsz = u_ref.shape[0]
+    uh4 = _votes_block(u_ref[:, pl.ds(row0, block_i), :],
+                       w_ref[...]).reshape(bsz, block_i, j, d)
+
+    @pl.when((p == 0) & (ib == 0))
+    def _():
+        b_scr[...] = jnp.zeros_like(b_scr)
+
+    @pl.when(p % 2 == 0)
+    def _():  # s-pass: accumulate s over i-blocks, squash at the last one
+        @pl.when(ib == 0)
+        def _():
+            s_scr[...] = jnp.zeros_like(s_scr)
+
+        c = jax.nn.softmax(b_scr[:, pl.ds(row0, block_i), :], axis=2)
+        s_scr[...] += jnp.einsum("bij,bijd->bjd", c, uh4).reshape(bsz, j * d)
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            v_scr[...] = squash(
+                s_scr[...].reshape(bsz, j, d)).reshape(bsz, j * d)
+
+            @pl.when(p == n_passes - 1)
+            def _():
+                o_ref[...] = v_scr[...].astype(o_ref.dtype)
+
+    @pl.when(p % 2 == 1)
+    def _():  # b-pass: logits update from the recomputed votes + resident v
+        v = v_scr[...].reshape(bsz, j, d)
+        b_scr[:, pl.ds(row0, block_i), :] += jnp.einsum(
+            "bijd,bjd->bij", uh4, v)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "iters", "num_classes", "mode", "block_i", "interpret"))
+def votes_routing(u: jax.Array, w: jax.Array, *, iters: int = 3,
+                  num_classes: int = 10, mode: str = "resident",
+                  block_i: int = 128, interpret: bool = True) -> jax.Array:
+    """u: [B, I, C], w: [I, J*D, C] -> v: [B, J*D]; votes + full routing.
+
+    ``mode``/``block_i`` come from the ExecutionPlan
+    (``plan.op("ClassCaps-Routing")``); see ``repro.kernels.ops`` for the
+    plan-aware wrapper.  The split ``caps_votes`` -> ``routing`` pair
+    remains available as the oracle/fallback path.
+    """
+    bsz, i_dim, c = u.shape
+    _, jd, _ = w.shape
+    j = num_classes
+    if jd % j:
+        raise ValueError(f"votes dim {jd} not divisible by classes {j}")
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
+    d = jd // j
+    block_i = max(1, min(block_i, i_dim))
+    n_blocks = pl.cdiv(i_dim, block_i)
+    i_pad = n_blocks * block_i
+    if i_pad != i_dim:                     # zero-pad the reduction axis: a
+        u = jnp.pad(u, ((0, 0), (0, i_pad - i_dim), (0, 0)))   # clamped tail
+        w = jnp.pad(w, ((0, i_pad - i_dim), (0, 0), (0, 0)))   # would double-
+    out_shape = jax.ShapeDtypeStruct((bsz, jd), u.dtype)       # count rows
+
+    if mode == "resident":
+        kernel = functools.partial(_resident_kernel, iters=iters, j=j, d=d,
+                                   n_blocks=n_blocks, block_i=block_i)
+        return pl.pallas_call(
+            kernel,
+            grid=(n_blocks,),
+            in_specs=[
+                pl.BlockSpec((bsz, block_i, c), lambda ib: (0, ib, 0)),
+                pl.BlockSpec((block_i, jd, c), lambda ib: (ib, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bsz, jd), lambda ib: (0, 0)),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bsz, i_pad, jd), jnp.float32)],
+            interpret=interpret,
+        )(u, w)
+
+    n_passes = 2 * iters + 1
+    kernel = functools.partial(_streamed_kernel, iters=iters, j=j, d=d,
+                               n_blocks=n_blocks, block_i=block_i,
+                               n_passes=n_passes)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_passes, n_blocks),
+        in_specs=[
+            # u: constant index map -> fetched once, resident for the run
+            pl.BlockSpec((bsz, i_pad, c), lambda p, ib: (0, 0, 0)),
+            # W: re-streamed every pass (the votes are recomputed on-chip)
+            pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)),
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bsz, i_pad, j), jnp.float32),   # logits b
+            pltpu.VMEM((bsz, jd), jnp.float32),         # s accumulator
+            pltpu.VMEM((bsz, jd), jnp.float32),         # squashed v
+        ],
+        interpret=interpret,
+    )(u, w)

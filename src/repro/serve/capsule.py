@@ -9,6 +9,13 @@ compiled once and amortized across the request stream.  Inactive slots
 carry zero images -- the capsule head is per-sample, so padding never
 perturbs active requests.
 
+On the pallas backend the engine compiles the FUSED plan: the ClassCaps
+head is one ``votes_routing`` megakernel (resident or streamed schedule
+per the plan's VMEM decision), so no slot tick ever round-trips the votes
+tensor through HBM.  Classification is finished on device too -- the
+jitted forward returns ``(lengths, argmax)`` and only the active slots'
+rows are transferred to host each tick.
+
 Per-request latency (submit -> classified) and engine throughput
 (requests/s) are reported by ``stats()``; tests validate slot-batched
 outputs against the direct single-request forward.
@@ -71,7 +78,9 @@ class CapsuleEngine:
         def fwd(p, images):
             out = capsnet.forward(p, images, cfg, backend=backend,
                                   plan=self.plan, interpret=interpret)
-            return out["lengths"]
+            lengths = out["lengths"]
+            # Classify on device: only per-slot results cross to host.
+            return lengths, jnp.argmax(lengths, axis=-1)
 
         self._forward = jax.jit(fwd)
 
@@ -109,13 +118,18 @@ class CapsuleEngine:
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
             return 0
-        lengths = np.asarray(self._forward(self.params,
-                                           jnp.asarray(self._batch)))
+        lengths_dev, preds_dev = self._forward(self.params,
+                                               jnp.asarray(self._batch))
+        # Gather the active slots on device so only those rows cross to
+        # host, in one device_get (argmax already ran inside the jit).
+        idx = jnp.asarray(act)
+        lengths, preds = jax.device_get((jnp.take(lengths_dev, idx, axis=0),
+                                         jnp.take(preds_dev, idx, axis=0)))
         now = time.perf_counter()
-        for s in act:
+        for pos, s in enumerate(act):
             req = self.active[s]
-            req.lengths = lengths[s]
-            req.pred = int(np.argmax(lengths[s]))
+            req.lengths = lengths[pos]
+            req.pred = int(preds[pos])
             req.finished_s = now
             self.finished.append(req)
             self.active[s] = None

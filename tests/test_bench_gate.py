@@ -1,0 +1,58 @@
+"""benchmarks/run.py --baseline gate: median speed normalization, gate=False
+exclusion, and regression detection (the CI perf-trajectory check)."""
+
+from benchmarks.run import compare_baseline
+
+
+def _rows(**named_us):
+    return [dict(name=n, us_per_call=us, derived="") for n, us in
+            named_us.items()]
+
+
+BASE = dict(rows=_rows(a=100.0, b=200.0, c=400.0, d=800.0, plan=0.0))
+
+
+def test_identical_runs_pass():
+    assert compare_baseline(BASE["rows"], BASE, 1.5) == []
+
+
+def test_uniform_machine_slowdown_absorbed():
+    slow = _rows(a=300.0, b=600.0, c=1200.0, d=2400.0, plan=0.0)
+    assert compare_baseline(slow, BASE, 1.5) == []
+
+
+def test_single_regression_flagged_against_median():
+    bad = _rows(a=100.0, b=200.0, c=400.0, d=2400.0, plan=0.0)
+    regs = compare_baseline(bad, BASE, 1.5)
+    assert [r["name"] for r in regs] == ["d"]
+    assert regs[0]["ratio"] == 3.0
+
+
+def test_regression_survives_machine_slowdown():
+    """2x slower machine AND one row 3x slower on top of that."""
+    bad = _rows(a=200.0, b=400.0, c=800.0, d=4800.0, plan=0.0)
+    regs = compare_baseline(bad, BASE, 1.5)
+    assert [r["name"] for r in regs] == ["d"]
+    assert regs[0]["ratio"] == 3.0
+
+
+def test_speedups_and_new_rows_never_flag():
+    cur = _rows(a=50.0, b=100.0, c=200.0, d=400.0, e=999.0)
+    assert compare_baseline(cur, BASE, 1.5) == []
+
+
+def test_zero_and_ungated_rows_excluded():
+    cur = _rows(a=100.0, b=200.0, c=400.0, d=800.0)
+    cur.append(dict(name="serving", us_per_call=5000.0, derived="",
+                    gate=False))
+    base = dict(rows=BASE["rows"]
+                + [dict(name="serving", us_per_call=100.0, derived="")])
+    assert compare_baseline(cur, base, 1.5) == []
+    # the same row WITH gating would have been flagged
+    cur[-1]["gate"] = True
+    regs = compare_baseline(cur, base, 1.5)
+    assert [r["name"] for r in regs] == ["serving"]
+
+
+def test_empty_baseline_is_noop():
+    assert compare_baseline(BASE["rows"], dict(rows=[]), 1.5) == []

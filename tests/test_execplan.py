@@ -38,9 +38,17 @@ NONPOW2 = CapsNetConfig(image_hw=15, conv1_channels=24, conv1_kernel=5,
 # ---------------------------------------------------------------------------
 
 def test_plan_covers_all_five_operations():
+    """Three EXECUTED ops (ClassCaps is one fused megakernel) covering the
+    five dataflow-model operations."""
     plan = compile_plan(CFG)
     assert [op.name for op in plan.ops] == [
+        "Conv1", "PrimaryCaps", "ClassCaps-Routing"]
+    assert [p.name for p in plan.profiles] == [
         "Conv1", "PrimaryCaps", "ClassCaps-FC", "Sum+Squash", "Update+Sum"]
+    assert plan.phase_groups() == (
+        ("Conv1", ("Conv1",)),
+        ("PrimaryCaps", ("PrimaryCaps",)),
+        ("ClassCaps-Routing", ("ClassCaps-FC", "Sum+Squash", "Update+Sum")))
     assert [r.name for r in plan.phase_requirements()] == [
         op.name for op in plan.ops]
 
@@ -68,7 +76,7 @@ def test_plan_profiles_match_analysis():
 
 def test_plan_block_i_not_degenerate_for_odd_caps():
     plan = compile_plan(ODD)
-    bi = plan.op("ClassCaps-FC").block_i
+    bi = plan.op("ClassCaps-Routing").block_i
     assert 1 < bi <= ODD.num_primary
     assert bi >= 8              # the old //=2 loop would have returned 1
 
@@ -76,13 +84,19 @@ def test_plan_block_i_not_degenerate_for_odd_caps():
 @pytest.mark.parametrize("cfg", [CFG, SMOKE, ODD, NONPOW2],
                          ids=["mnist", "smoke", "odd", "nonpow2"])
 def test_plan_runs_whole_network_through_pallas(cfg):
-    """No conv2d.xla asterisk left: every operation has a Pallas executor."""
+    """No conv2d.xla asterisk left, and no separate caps_votes+routing
+    pair: the ClassCaps head is ONE fused votes_routing op."""
     plan = compile_plan(cfg, batch=2)
     kernels = {op.name: op.kernel for op in plan.ops}
     assert not any("xla" in k for k in kernels.values()), kernels
     assert kernels["Conv1"] == "conv_im2col"
     assert kernels["PrimaryCaps"].startswith("conv_im2col")
-    assert kernels["ClassCaps-FC"] == "caps_votes"
+    assert kernels["ClassCaps-Routing"] == "votes_routing"
+    assert "caps_votes" not in kernels.values()
+    assert "routing" not in kernels.values()
+    fused = plan.op("ClassCaps-Routing")
+    assert fused.mode in ("resident", "streamed")
+    assert fused.uhat_hbm_bytes == 0            # the votes never hit HBM
     for name in ("Conv1", "PrimaryCaps"):
         blk = plan.op(name).block
         assert blk is not None and blk.block_m >= 1 and blk.block_k >= 1
@@ -124,36 +138,34 @@ def test_plan_rejects_impossible_budget():
 
 
 def test_votes_block_i_raises_plan_error_at_source():
-    """An infeasible batch fails in _votes_block_i with a message naming
-    the batch, the budget, and the largest feasible batch -- not later in
-    validate() with a generic footprint complaint."""
-    from repro.core.execplan import _votes_block_i, _votes_max_batch
+    """An infeasible batch fails in the split-path i-tile pick with a
+    message naming the batch, the budget, and the largest feasible batch
+    -- not later in validate() with a generic footprint complaint."""
+    from repro.core.execplan import _votes_block_i_raw, _votes_max_batch
     dims = analysis.dims_from_config(SMOKE)
     out_dim = dims.num_classes * dims.class_dim
     budget = 200_000
     feasible = _votes_max_batch(dims.primary_dim, out_dim, budget)
     assert feasible > 0
-    # boundary: the largest feasible batch compiles, one past it raises
-    wl, block, bi = _votes_block_i(dims, feasible, budget)
+    # boundary: the largest feasible batch plans, one past it raises
+    bi = _votes_block_i_raw(dims.num_primary, dims.primary_dim, out_dim,
+                            feasible, budget)
     assert bi >= 1
     with pytest.raises(PlanError) as exc:
-        _votes_block_i(dims, feasible + 1, budget)
+        _votes_block_i_raw(dims.num_primary, dims.primary_dim, out_dim,
+                           feasible + 1, budget)
     msg = str(exc.value)
     assert f"batch={feasible + 1}" in msg
     assert str(budget) in msg
     assert f"largest feasible batch is {feasible}" in msg
 
 
-def test_compile_plan_surfaces_votes_plan_error():
-    """compile_plan at an over-budget batch reports the caps-votes message
-    (convs and routing fit; the batched votes footprint is what breaks)."""
-    from repro.core.execplan import _votes_max_batch
-    dims = analysis.dims_from_config(SMOKE)
-    budget = 400_000
-    bad = _votes_max_batch(dims.primary_dim,
-                           dims.num_classes * dims.class_dim, budget) + 1
-    with pytest.raises(PlanError, match="largest feasible batch"):
-        compile_plan(SMOKE, batch=bad, vmem_budget=budget)
+def test_compile_plan_surfaces_fused_plan_error():
+    """compile_plan at a batch no fused schedule can serve reports the
+    megakernel's message: PlanError names the streamed block_i=1 floor
+    (the convs fit; the resident AND streamed footprints are what break)."""
+    with pytest.raises(PlanError, match="streamed block_i=1"):
+        compile_plan(SMOKE, batch=2000, vmem_budget=400_000)
 
 
 def test_plan_validate_catches_oversized_op():
@@ -174,11 +186,18 @@ def test_plan_unknown_op_lookup():
 # ---------------------------------------------------------------------------
 
 def test_dse_default_uses_plan_schedule():
+    """The default DSE scores the plan's FUSED phases (one gating phase
+    for the votes+routing megakernel); explicit profiles keep the paper's
+    five-phase model."""
     via_plan = dse.best_design(plan=compile_plan(CFG))
     default = dse.best_design()
+    assert via_plan.org_name == default.org_name
+    assert via_plan.total_mj == pytest.approx(default.total_mj)
+    grouped = via_plan.evaluation.schedules[0]
+    assert [ph.name for ph in grouped.phases] == [
+        "Conv1", "PrimaryCaps", "ClassCaps-Routing"]
     explicit = dse.best_design(analysis.capsnet_profiles())
-    assert via_plan.org_name == default.org_name == explicit.org_name
-    assert via_plan.total_mj == pytest.approx(explicit.total_mj)
+    assert len(explicit.evaluation.schedules[0].phases) == 5
 
 
 def test_dse_rejects_profiles_and_plan_together():
@@ -196,11 +215,25 @@ def test_schedule_from_plan_matches_manual_requirements():
     assert [p.name for p in got.phases] == [op.name for op in plan.ops]
 
 
-def test_evaluate_plan_matches_evaluate():
+def test_evaluate_plan_gates_fused_phases():
+    """evaluate_plan == evaluate with the plan's phase groups: the fused
+    megakernel is ONE gating phase with the peak demand and summed
+    duration of the operations it covers, and identical dynamic energy."""
     plan = compile_plan(CFG)
     org = dse.design_organizations(list(plan.profiles))["PG-SEP"]
-    assert (dse.evaluate_plan(org, plan).total_mj
-            == pytest.approx(dse.evaluate(org, list(plan.profiles)).total_mj))
+    via_plan = dse.evaluate_plan(org, plan)
+    grouped = dse.evaluate(org, list(plan.profiles),
+                           phase_groups=plan.phase_groups())
+    ungrouped = dse.evaluate(org, list(plan.profiles))
+    assert via_plan.total_mj == pytest.approx(grouped.total_mj)
+    assert via_plan.dynamic_mj == pytest.approx(ungrouped.dynamic_mj)
+    for sched, raw in zip(via_plan.schedules, ungrouped.schedules):
+        assert len(sched.phases) == 3 and len(raw.phases) == 5
+        fused, covered = sched.phases[-1], raw.phases[2:]
+        assert fused.duration_s == pytest.approx(
+            sum(ph.duration_s for ph in covered))
+        assert fused.on_fraction == pytest.approx(
+            max(ph.on_fraction for ph in covered))
 
 
 # ---------------------------------------------------------------------------

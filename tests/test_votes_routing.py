@@ -1,0 +1,208 @@
+"""Fused votes+routing megakernel: parity vs the jnp reference and the
+split caps_votes->routing path (ragged i-blocks, non-power-of-two capsule
+counts, batch>1, both schedules), the plan's resident-vs-streamed
+decision, PlanError boundaries, and the modeled u_hat HBM savings."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import capsnet, execplan
+from repro.core.capsnet import CapsNetConfig
+from repro.core.execplan import (FUSED_NAME, PlanError, compile_plan,
+                                 plan_votes_routing,
+                                 split_votes_routing_hbm_bytes,
+                                 votes_routing_hbm_bytes)
+from repro.core.planner import VMEM_BYTES
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+# Odd image + 24 capsule groups (the NONPOW2 config of test_execplan):
+# num_primary = 600, every dimension non-power-of-two.
+NONPOW2 = CapsNetConfig(image_hw=15, conv1_channels=24, conv1_kernel=5,
+                        pc_kernel=3, pc_stride=2, num_primary_groups=24,
+                        primary_dim=4, class_dim=8, use_decoder=False)
+
+
+def _uv(b, i, c, jd, seed=0):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, seed))
+    u = 0.5 * jax.random.normal(k1, (b, i, c))
+    w = 0.3 * jax.random.normal(k2, (i, jd, c))
+    return u, w
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: fused == jnp reference == split caps_votes -> routing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["resident", "streamed"])
+@pytest.mark.parametrize("b,i,c,j,d,bi", [
+    (1, 64, 8, 10, 16, 32),       # divisible blocks
+    (2, 100, 8, 10, 16, 32),      # ragged final i-block (100 % 32)
+    (3, 135, 8, 5, 8, 64),        # batch > 1 + ragged tail
+    (2, 27, 4, 4, 8, 8),          # odd non-power-of-two capsule count
+])
+def test_fused_matches_reference_and_split(mode, b, i, c, j, d, bi):
+    u, w = _uv(b, i, c, j * d, seed=i)
+    got = ops.votes_routing(u, w, iters=3, num_classes=j, mode=mode,
+                            block_i=bi)
+    want = ref.routing(ref.caps_votes(u, w).reshape(b, i, j, d),
+                       3).reshape(b, j * d)
+    split = ops.routing(ops.caps_votes(u, w, block_i=bi), iters=3,
+                        num_classes=j)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(split),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["resident", "streamed"])
+@pytest.mark.parametrize("iters", [1, 2, 5])
+def test_fused_iteration_sweep(mode, iters):
+    u, w = _uv(2, 96, 8, 40, seed=iters)
+    got = ops.votes_routing(u, w, iters=iters, num_classes=5, mode=mode,
+                            block_i=32)
+    want = ref.routing(ref.caps_votes(u, w).reshape(2, 96, 5, 8),
+                       iters).reshape(2, 40)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_rejects_bad_mode_and_classes():
+    u, w = _uv(1, 16, 4, 20)
+    with pytest.raises(ValueError, match="unknown mode"):
+        ops.votes_routing(u, w, num_classes=5, mode="hybrid", block_i=8)
+    with pytest.raises(ValueError, match="not divisible"):
+        ops.votes_routing(u, w, num_classes=3, mode="resident", block_i=8)
+
+
+def test_fused_planless_wrapper_picks_schedule():
+    """Without a plan the wrapper resolves (mode, block_i) through the
+    memoized plan decision and still matches the reference."""
+    u, w = _uv(2, 150, 8, 80, seed=7)
+    got = ops.votes_routing(u, w, iters=3, num_classes=10)
+    want = ref.routing(ref.caps_votes(u, w).reshape(2, 150, 10, 8),
+                       3).reshape(2, 80)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    mode, bi = ops.planned_votes_routing(150, 8, 80, 10, 3, 2)
+    assert mode == "resident"               # MNIST-scale votes fit VMEM
+    assert 1 <= bi <= 150
+
+
+# ---------------------------------------------------------------------------
+# Plan decision: resident by default, streamed under pressure, PlanError
+# only when even streamed block_i=1 cannot fit
+# ---------------------------------------------------------------------------
+
+def test_small_budget_flips_plan_to_streamed():
+    args = dict(batch=2, iters=3)
+    roomy = plan_votes_routing(600, 4, 80, 10, **args)
+    assert roomy.mode == "resident" and roomy.n_passes == 1
+    tight = plan_votes_routing(600, 4, 80, 10, vmem_budget=150_000, **args)
+    assert tight.mode == "streamed" and tight.n_passes == 2 * 3 + 1
+    assert tight.vmem_bytes <= 150_000
+    # the flip is forced: no resident i-tile fits this budget
+    assert execplan._fused_resident_vmem(2, 600, 1, 4, 80, 10) > 150_000
+
+
+def test_plan_error_only_when_streamed_block1_unfit():
+    floor = execplan._fused_streamed_vmem(2, 600, 1, 4, 80, 10)
+    at_floor = plan_votes_routing(600, 4, 80, 10, batch=2,
+                                  vmem_budget=floor)
+    assert at_floor.mode == "streamed" and at_floor.block_i == 1
+    with pytest.raises(PlanError, match="streamed block_i=1"):
+        plan_votes_routing(600, 4, 80, 10, batch=2, vmem_budget=floor - 1)
+
+
+def test_streamed_plan_executes_config_old_path_could_not():
+    """num_primary >> budget: the votes (and the old resident-only routing
+    state) exceed VMEM, so the pre-fusion path raised; the streamed
+    schedule compiles AND matches the jnp reference end to end."""
+    budget = 150_000
+    plan = compile_plan(NONPOW2, batch=2, vmem_budget=budget)
+    fused = plan.op(FUSED_NAME)
+    assert fused.mode == "streamed"
+    assert fused.vmem_bytes <= budget
+    # the old path's floor: votes resident per batch element
+    dims_votes = NONPOW2.num_primary * NONPOW2.num_classes \
+        * NONPOW2.class_dim * execplan.ELEM_BYTES
+    assert dims_votes > budget
+    params = capsnet.init_params(KEY, NONPOW2)
+    imgs = jax.random.uniform(KEY, (2, 15, 15, 1))
+    want = capsnet.forward(params, imgs, NONPOW2)
+    got = capsnet.forward(params, imgs, NONPOW2, backend="pallas", plan=plan)
+    np.testing.assert_allclose(np.asarray(got["lengths"]),
+                               np.asarray(want["lengths"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_wrapper_rejects_batch_over_plan():
+    """A batch larger than the plan's would scale the VMEM scratch past
+    the validated footprint; smaller batches are within the bound."""
+    plan = compile_plan(CapsNetConfig(use_decoder=False), batch=2)
+    cfg = CapsNetConfig()
+    u, w = _uv(4, cfg.num_primary, cfg.primary_dim,
+               cfg.num_classes * cfg.class_dim, seed=11)
+    with pytest.raises(ValueError, match="exceeds the plan's batch"):
+        ops.votes_routing(u, w, plan=plan)
+    out = ops.votes_routing(u[:1], w, plan=plan)          # smaller: fine
+    assert out.shape == (1, cfg.num_classes * cfg.class_dim)
+
+
+def test_fused_modes_agree_on_same_network():
+    """Resident and streamed schedules are numerically interchangeable."""
+    u, w = _uv(2, 600, 4, 80, seed=3)
+    res = ops.votes_routing(u, w, iters=3, num_classes=10, mode="resident",
+                            block_i=128)
+    stre = ops.votes_routing(u, w, iters=3, num_classes=10, mode="streamed",
+                             block_i=16)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(stre),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Modeled HBM traffic: the u_hat round-trip is gone
+# ---------------------------------------------------------------------------
+
+def test_plan_reports_zero_uhat_traffic_and_savings():
+    plan = compile_plan(CapsNetConfig(), batch=8)
+    fused = plan.op(FUSED_NAME)
+    assert fused.uhat_hbm_bytes == 0
+    dims = (8, CapsNetConfig().num_primary, CapsNetConfig().primary_dim,
+            CapsNetConfig().num_classes * CapsNetConfig().class_dim)
+    split_total, uhat = split_votes_routing_hbm_bytes(*dims)
+    # u_hat is written once and read back once by the split pair
+    assert uhat == 2 * 8 * 1152 * 160 * execplan.ELEM_BYTES
+    assert fused.mode == "resident"
+    fused_total = votes_routing_hbm_bytes(*dims, n_passes=1)
+    assert fused.hbm_bytes == fused_total
+    assert split_total - fused_total == uhat    # savings == the round-trip
+
+
+# ---------------------------------------------------------------------------
+# Satellite: plan-less split-path pick respects batch + budget, caches
+# bounded
+# ---------------------------------------------------------------------------
+
+def test_planned_block_i_shrinks_with_batch():
+    bi1 = ops.planned_block_i(1152, 8, 160)
+    bi_big = ops.planned_block_i(1152, 8, 160, batch=4096)
+    assert bi_big <= bi1
+    for batch, bi in ((1, bi1), (4096, bi_big)):
+        assert execplan._votes_vmem(batch, bi, 8, 160) <= VMEM_BYTES
+
+
+def test_planned_block_i_respects_small_budget():
+    budget = 200_000
+    bi = ops.planned_block_i(1152, 8, 160, 4, budget)
+    assert execplan._votes_vmem(4, bi, 8, 160) <= budget
+    with pytest.raises(PlanError, match="largest feasible batch"):
+        ops.planned_block_i(1152, 8, 160, 10_000, budget)
+
+
+def test_plan_caches_are_bounded():
+    assert ops.planned_block_i.cache_info().maxsize == 64
+    assert ops.planned_votes_routing.cache_info().maxsize == 64
+    assert ops.planned_conv_blocks.cache_info().maxsize == 64
