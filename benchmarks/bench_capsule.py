@@ -18,7 +18,8 @@ import numpy as np
 from benchmarks.common import row, timed
 from repro.core import capsnet
 from repro.core.capsnet import CapsNetConfig
-from repro.core.execplan import (FUSED_NAME, compile_plan,
+from repro.core.execplan import (BWD_SUFFIX, FUSED_NAME, compile_plan,
+                                 spilled_votes_routing_bwd_hbm_bytes,
                                  split_votes_routing_hbm_bytes)
 from repro.kernels import ops
 from repro.serve.capsule import CapsRequest, CapsuleEngine
@@ -88,6 +89,31 @@ def main() -> None:
     row("votes-routing/hbm-bytes-uhat-saved", 0.0,
         f"{uhat_bytes:.0f} (u_hat round-trip killed; fused uhat_hbm_bytes="
         f"{fused_op.uhat_hbm_bytes:.0f})")
+
+    # Backward: the custom-VJP training step through both backends, and
+    # the fused backward's modeled HBM bytes vs a recompute-from-HBM
+    # backward (u_hat spilled by the forward, d u_hat round-tripping the
+    # same way -- the traffic the fused backward never moves).
+    tplan = compile_plan(CFG, batch=BATCH, train=True)
+    bwd_op = tplan.op(FUSED_NAME + BWD_SUFFIX)
+    labels = jax.random.randint(key, (BATCH,), 0, CFG.num_classes)
+    g_jnp = jax.jit(jax.grad(
+        lambda p, x, y: capsnet.total_loss(p, x, y, CFG)[0]))
+    g_pal = jax.jit(jax.grad(
+        lambda p, x, y: capsnet.total_loss(p, x, y, CFG, backend="pallas",
+                                           plan=tplan)[0]))
+    _, us = timed(lambda: np.asarray(g_jnp(params, imgs, labels)["cc_w"]))
+    row("capsnet-grad-jnp", us, f"batch={BATCH}")
+    _, us = timed(lambda: np.asarray(g_pal(params, imgs, labels)["cc_w"]))
+    row("capsnet-grad-pallas", us,
+        f"bwd_mode={bwd_op.mode} bwd_block_i={bwd_op.block_i}")
+    spilled_bytes, uhat_bwd = spilled_votes_routing_bwd_hbm_bytes(
+        BATCH, CFG.num_primary, CFG.primary_dim, jd)
+    row("votes-routing-bwd/hbm-bytes-fused", 0.0, f"{bwd_op.hbm_bytes:.0f}")
+    row("votes-routing-bwd/hbm-bytes-spilled", 0.0, f"{spilled_bytes:.0f}")
+    row("votes-routing-bwd/hbm-bytes-uhat-saved", 0.0,
+        f"{uhat_bwd:.0f} (u_hat + d_u_hat round-trips killed; fused bwd "
+        f"uhat_hbm_bytes={bwd_op.uhat_hbm_bytes:.0f})")
 
     engine = CapsuleEngine(params, CFG, slots=BATCH, plan=plan)
     pool = np.asarray(imgs)

@@ -10,12 +10,21 @@ is tracked across commits).  ``--baseline PATH`` compares this run's
 against the committed ``benchmarks/BENCH_baseline.json`` so the perf
 trajectory actually gates.
 
+``--trend PATH [PATH ...]`` watches the drift the gate cannot see: it
+compares the last N ``BENCH_capsule.json`` artifacts (chronological; a
+single directory argument globs ``BENCH*.json`` by mtime), appends the
+CURRENT run's rows as the newest point, and FAILS on rows whose
+speed-normalized time creeps up monotonically across the window even
+though every single step stayed below the gate's factor.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [module ...] [--json PATH]
        [--baseline PATH] [--regression-factor X]
+       [--trend PATH ...] [--trend-window N]
 """
 
 import argparse
 import json
+import pathlib
 import platform
 import traceback
 
@@ -77,6 +86,64 @@ def compare_baseline(rows: list[dict], baseline: dict,
     return regressions
 
 
+def detect_trend(histories: list[dict], *, min_points: int = 3,
+                 tolerance: float = 0.03, min_total: float = 1.2
+                 ) -> list[dict]:
+    """Rows whose ``us_per_call`` creeps up monotonically across artifacts.
+
+    The ``--baseline`` gate catches a single-step regression beyond its
+    factor (1.5x locally); a drift of +10% per commit stays below that
+    threshold forever.  Given the last N artifacts in chronological
+    order, each artifact is speed-normalized by the MEDIAN ratio of its
+    shared timed rows vs the first artifact (the gate's machine-speed
+    cancellation), and a row is flagged when its normalized time never
+    drops by more than ``tolerance`` at any step AND the total drift
+    across the window exceeds ``min_total`` -- a monotonic slowdown the
+    per-commit gate never fired on.
+
+    Returns ``[{name, ratio, us_per_call, first_us, points}, ...]``;
+    empty when fewer than ``min_points`` artifacts are given.
+    """
+    if len(histories) < min_points:
+        return []
+    runs = [{r["name"]: r.get("us_per_call", 0.0)
+             for r in h.get("rows", []) if r.get("gate", True)}
+            for h in histories]
+    shared = [n for n, us in runs[0].items()
+              if us > 0.0 and all(run.get(n, 0.0) > 0.0 for run in runs)]
+    if not shared:
+        return []
+    norm = []
+    for run in runs:
+        ratios = sorted(run[n] / runs[0][n] for n in shared)
+        scale = ratios[len(ratios) // 2]          # median speed delta
+        norm.append({n: run[n] / scale for n in shared})
+    flagged = []
+    for name in sorted(shared):
+        seq = [run[name] for run in norm]
+        monotone = all(b >= a * (1.0 - tolerance)
+                       for a, b in zip(seq, seq[1:]))
+        total = seq[-1] / seq[0]
+        if monotone and total > min_total:
+            flagged.append(dict(name=name, ratio=round(total, 2),
+                                us_per_call=runs[-1][name],
+                                first_us=runs[0][name],
+                                points=len(seq)))
+    return flagged
+
+
+def _trend_paths(args_trend: list[str], window: int) -> list[pathlib.Path]:
+    """Artifact paths, chronological: explicit files keep their order; a
+    single directory argument globs BENCH*.json sorted by mtime.  Only
+    the last ``window`` participate."""
+    if len(args_trend) == 1 and pathlib.Path(args_trend[0]).is_dir():
+        paths = sorted(pathlib.Path(args_trend[0]).glob("BENCH*.json"),
+                       key=lambda p: p.stat().st_mtime)
+    else:
+        paths = [pathlib.Path(p) for p in args_trend]
+    return paths[-window:]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("modules", nargs="*", default=[], metavar="module",
@@ -88,6 +155,13 @@ def main() -> None:
     ap.add_argument("--regression-factor", type=float, default=1.5,
                     metavar="X", help="fail when a row exceeds X * baseline "
                     "(speed-normalized; default 1.5)")
+    ap.add_argument("--trend", nargs="+", default=None, metavar="PATH",
+                    help="prior --json artifacts (chronological), or ONE "
+                    "directory of them: fail on monotonic slowdowns the "
+                    "per-commit gate stayed below")
+    ap.add_argument("--trend-window", type=int, default=5, metavar="N",
+                    help="how many of the newest artifacts to compare "
+                    "(default 5)")
     args = ap.parse_args()
     unknown = [n for n in args.modules if n not in MODULES]
     if unknown:
@@ -117,6 +191,30 @@ def main() -> None:
         else:
             print(f"no perf regressions vs {args.baseline} "
                   f"(factor {args.regression_factor}x)")
+    if args.trend:
+        paths = _trend_paths(args.trend, args.trend_window)
+        histories = []
+        for p in paths:
+            with open(p) as fh:
+                histories.append(json.load(fh))
+        if common.RECORDS:
+            # THIS run is the newest history point: a drift completed by
+            # the current commit must flag now, not one artifact later.
+            histories.append(dict(rows=common.RECORDS))
+            histories = histories[-args.trend_window:]
+        trends = detect_trend(histories)
+        if trends:
+            print(f"PERF TRENDS over {len(histories)} artifacts "
+                  f"(monotonic, speed-normalized):")
+            for t in trends:
+                print(f"  {t['name']}: {t['first_us']:.1f} us -> "
+                      f"{t['us_per_call']:.1f} us ({t['ratio']}x over "
+                      f"{t['points']} runs)")
+            failures.append("trend")
+        elif len(histories) < 3:
+            print(f"trend: only {len(histories)} artifact(s), need >= 3")
+        else:
+            print(f"no perf trends over {len(histories)} artifacts")
     if args.json:
         with open(args.json, "w") as fh:
             json.dump(dict(modules=names, failures=failures,

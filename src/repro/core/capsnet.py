@@ -211,9 +211,18 @@ def margin_loss(lengths: jax.Array, labels: jax.Array,
 
 def total_loss(params: Params, images: jax.Array, labels: jax.Array,
                cfg: CapsNetConfig = CapsNetConfig(),
-               recon_weight: float = 0.0005) -> tuple[jax.Array, dict]:
-    # Training semantics: the decoder reconstructs the LABELED capsule.
-    out = forward(params, images, cfg, labels=labels)
+               recon_weight: float = 0.0005, *, backend: str = "jnp",
+               plan=None, interpret: bool = True) -> tuple[jax.Array, dict]:
+    """Margin loss + masked reconstruction, differentiable on BOTH backends.
+
+    The decoder reconstructs the LABELED capsule (training semantics), so
+    the reconstruction term backpropagates only through that capsule's
+    pose -- on the Pallas path the gradient flows through the kernels'
+    custom VJPs (compile the plan with ``train=True`` to pin the backward
+    schedule; otherwise the memoized backward plan decision applies).
+    """
+    out = forward(params, images, cfg, labels=labels, backend=backend,
+                  plan=plan, interpret=interpret)
     loss = margin_loss(out["lengths"], labels)
     metrics = {"margin_loss": loss}
     if "reconstruction" in out:
@@ -227,11 +236,13 @@ def total_loss(params: Params, images: jax.Array, labels: jax.Array,
     return loss, metrics
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+@functools.partial(jax.jit, static_argnames=("cfg", "lr", "backend",
+                                             "interpret"))
 def train_step(params: Params, images: jax.Array, labels: jax.Array,
                cfg: CapsNetConfig = CapsNetConfig(),
-               lr: float = 1e-3) -> tuple[Params, dict]:
+               lr: float = 1e-3, *, backend: str = "jnp",
+               interpret: bool = True) -> tuple[Params, dict]:
     (_, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
-        params, images, labels, cfg)
+        params, images, labels, cfg, backend=backend, interpret=interpret)
     params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
     return params, metrics

@@ -333,7 +333,7 @@ class DSEResult:
 
 def explore(profiles: Sequence[OperationProfile] | None = None,
             sector_choices: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128, 256),
-            *, plan=None) -> list[DSEResult]:
+            *, plan=None, train: bool = False) -> list[DSEResult]:
     """Evaluate every organization x sector count; sorted by energy.
 
     The profiles default to those of an ``ExecutionPlan`` compiled for the
@@ -342,13 +342,18 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
     phases (``plan.phase_groups()``: the votes+routing megakernel is one
     phase).  Pass ``plan=`` to score a differently-shaped network, or raw
     ``profiles`` for paper-model ablations (one phase per operation).
+
+    ``train=True`` compiles the default plan with its backward OpPlans,
+    so the organizations are sized for (and the PMU gates) a full
+    training step: forward phases then backward phases in reverse
+    network order, one per executed backward kernel.
     """
     phase_groups = None
     if profiles is None:
         if plan is None:
             from repro.core import execplan
             from repro.core.capsnet import CapsNetConfig
-            plan = execplan.compile_plan(CapsNetConfig())
+            plan = execplan.compile_plan(CapsNetConfig(), train=train)
         profiles = plan.profiles
         phase_groups = plan.phase_groups()
     elif plan is not None:
@@ -376,8 +381,8 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
 
 
 def best_design(profiles: Sequence[OperationProfile] | None = None,
-                *, plan=None) -> DSEResult:
-    return explore(profiles, plan=plan)[0]
+                *, plan=None, train: bool = False) -> DSEResult:
+    return explore(profiles, plan=plan, train=train)[0]
 
 
 def evaluate_plan(org: MemoryOrg, plan) -> OrgEvaluation:

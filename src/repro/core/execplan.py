@@ -42,6 +42,11 @@ SQUASH_BLOCK_ROWS = 1024
 FUSED_NAME = "ClassCaps-Routing"
 FUSED_COVERS = ("ClassCaps-FC", "Sum+Squash", "Update+Sum")
 
+# Training plans append one backward OpPlan per executed kernel, named
+# "<op>-bwd" and listed in reverse network order (the order the backward
+# actually runs), so dse/pmu gate the backward phases like the forward's.
+BWD_SUFFIX = "-bwd"
+
 
 class PlanError(ValueError):
     """An ExecutionPlan violates one of its invariants."""
@@ -99,6 +104,7 @@ class ExecutionPlan:
     dataflow: str
     vmem_budget: int
     ops: tuple[OpPlan, ...]
+    train: bool = False          # backward OpPlans appended (reverse order)
 
     def op(self, name: str) -> OpPlan:
         for op in self.ops:
@@ -146,6 +152,10 @@ class ExecutionPlan:
         expected = [p.name for p in
                     analysis.capsnet_profiles(self.dataflow,
                                               analysis.dims_from_config(self.cfg))]
+        if self.train:
+            # Backward phases mirror the forward coverage in reverse
+            # execution order (the order the backward actually runs).
+            expected = expected + [n + BWD_SUFFIX for n in reversed(expected)]
         if covered != expected:
             raise PlanError(
                 f"phases {names} cover {covered}, not operations {expected}")
@@ -348,6 +358,145 @@ def split_votes_routing_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
     return float((u + w + v + uhat) * ELEM_BYTES), float(uhat * ELEM_BYTES)
 
 
+# ---------------------------------------------------------------------------
+# Fused votes+routing BACKWARD schedule (the custom-VJP kernels' DSE)
+# ---------------------------------------------------------------------------
+
+def _fused_resident_bwd_vmem(batch: int, num_caps: int, block_i: int,
+                             caps_dim: int, jd: int, j: int,
+                             iters: int) -> int:
+    """Resident backward: the rebuilt votes scratch (overwritten by
+    ``d u_hat`` in place) plus the routing replay's vjp residuals -- the
+    logits trajectory and couplings per iteration -- with double-buffered
+    u/W tiles streaming past twice and one du/dW block emitted per step."""
+    i_pad = _i_padded(num_caps, block_i)
+    votes = batch * i_pad * jd                     # u_hat -> d u_hat in place
+    traj = 2 * (iters + 1) * batch * i_pad * j     # replay: b trajectory + c
+    tiles = 2 * (batch * block_i * caps_dim + block_i * jd * caps_dim)
+    uh_block = batch * block_i * jd
+    grads = batch * block_i * caps_dim + block_i * jd * caps_dim
+    sv = 4 * batch * jd                            # s/v/ds/dv temporaries
+    cot = batch * jd                               # output cotangent
+    return (votes + traj + tiles + uh_block + grads + sv + cot) * ELEM_BYTES
+
+
+def _fused_streamed_bwd_vmem(batch: int, num_caps: int, block_i: int,
+                             caps_dim: int, jd: int, j: int,
+                             iters: int) -> int:
+    """Streamed backward: u, a ROLLING PAIR of logits slabs (only
+    ``b_{T-1}``/``b_T`` are ever consumed again under the stop-gradient
+    convention), ``db_T``, and the small s/ds pairs stay resident; W
+    tiles stream (double-buffered) on every pass and each step recomputes
+    one votes block -- ``d u_hat`` exists only one i-block at a time.
+    Independent of ``iters``: the replay reuses the two slots."""
+    del iters
+    i_pad = _i_padded(num_caps, block_i)
+    u_res = batch * i_pad * caps_dim
+    b_pair = 2 * batch * i_pad * j
+    db = batch * i_pad * j
+    w_tile = 2 * block_i * jd * caps_dim
+    uh_block = batch * block_i * jd
+    s_ds = 4 * batch * jd                          # s pair + ds pair
+    accv = 2 * batch * jd                          # accumulator + v
+    grads = batch * block_i * caps_dim + block_i * jd * caps_dim
+    cot = batch * jd
+    return (u_res + b_pair + db + w_tile + uh_block + s_ds + accv + grads
+            + cot) * ELEM_BYTES
+
+
+def _fused_bwd_max_batch(num_caps: int, caps_dim: int, jd: int, j: int,
+                         iters: int, vmem_budget: int) -> int:
+    """Largest batch whose streamed-backward block_i=1 footprint fits
+    (the footprint is affine in batch at fixed block_i)."""
+    fixed = _fused_streamed_bwd_vmem(0, num_caps, 1, caps_dim, jd, j, iters)
+    per = (_fused_streamed_bwd_vmem(1, num_caps, 1, caps_dim, jd, j, iters)
+           - fixed)
+    return max((vmem_budget - fixed) // per, 0)
+
+
+def plan_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int, j: int, *,
+                           batch: int = 1, iters: int = 3,
+                           vmem_budget: int = VMEM_BYTES
+                           ) -> VotesRoutingSchedule:
+    """Resident-vs-streamed decision for the fused megakernel's BACKWARD.
+
+    Chosen independently of the forward: the backward's scratch is larger
+    (the logits trajectory rides along, and resident additionally holds
+    the in-place ``d u_hat``), so a budget can plan the forward resident
+    -- or plan the forward at all -- and still be unable to run the
+    backward.  That boundary raises a ``PlanError`` naming the backward
+    op and the largest feasible batch, instead of failing opaquely in
+    ``validate()``.
+
+    ``n_passes`` counts W streams: 2 resident (votes rebuild + du/dW
+    emit), ``2*iters + 4`` streamed (forward replay ``2T+1``, db seed,
+    ONE dv/ds reverse pass, emit -- the stop-gradient convention means
+    ``d u_hat`` only ever needs ``ds_T`` and ``ds_{T-1}``, so there is
+    no deep reverse recurrence to stream W for).
+    """
+    wl = MatmulWorkload(m=num_caps, k=caps_dim, n=jd, in_bytes=ELEM_BYTES)
+    bi0 = max(min(plan_matmul(wl).block_m, num_caps), 1)
+
+    bi = bi0
+    while bi > 1 and _fused_resident_bwd_vmem(batch, num_caps, bi, caps_dim,
+                                              jd, j, iters) > vmem_budget:
+        bi //= 2
+    need = _fused_resident_bwd_vmem(batch, num_caps, bi, caps_dim, jd, j,
+                                    iters)
+    if need <= vmem_budget:
+        return VotesRoutingSchedule(mode="resident", block_i=bi,
+                                    vmem_bytes=need, n_passes=2, workload=wl)
+
+    bi = bi0
+    while bi > 1 and _fused_streamed_bwd_vmem(batch, num_caps, bi, caps_dim,
+                                              jd, j, iters) > vmem_budget:
+        bi //= 2
+    need = _fused_streamed_bwd_vmem(batch, num_caps, bi, caps_dim, jd, j,
+                                    iters)
+    if need > vmem_budget:
+        raise PlanError(
+            f"{FUSED_NAME}{BWD_SUFFIX}: no feasible backward schedule at "
+            f"batch={batch}: even streamed block_i=1 needs {need} B of "
+            f"VMEM, over the {vmem_budget} B budget; largest feasible "
+            f"batch is "
+            f"{_fused_bwd_max_batch(num_caps, caps_dim, jd, j, iters, vmem_budget)}")
+    return VotesRoutingSchedule(mode="streamed", block_i=bi, vmem_bytes=need,
+                                n_passes=2 * iters + 4, workload=wl)
+
+
+def votes_routing_bwd_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
+                                jd: int, *, mode: str, iters: int) -> float:
+    """Modeled HBM traffic of the fused backward per step: W streamed once
+    per pass, u read per pass (resident) or once (streamed: constant index
+    map), the output cotangent read once, du/dW written once -- and NO
+    ``u_hat`` or ``d u_hat`` term (neither ever exists off-chip)."""
+    w_passes = 2 if mode == "resident" else 2 * iters + 4
+    u_passes = 2 if mode == "resident" else 1
+    u = batch * num_caps * caps_dim * u_passes
+    w = num_caps * jd * caps_dim * w_passes
+    cot = batch * jd
+    du = batch * num_caps * caps_dim
+    dw = num_caps * jd * caps_dim
+    return float((u + w + cot + du + dw) * ELEM_BYTES)
+
+
+def spilled_votes_routing_bwd_hbm_bytes(batch: int, num_caps: int,
+                                        caps_dim: int, jd: int
+                                        ) -> tuple[float, float]:
+    """(total, u_hat share) of a recompute-from-HBM backward: the forward
+    spills ``u_hat``, the backward reads it back, writes ``d u_hat`` and
+    reads it again for the du/dW contractions -- four votes-sized HBM
+    trips the fused backward never makes."""
+    uhat = 4 * batch * num_caps * jd
+    u = batch * num_caps * caps_dim
+    w = num_caps * jd * caps_dim
+    cot = batch * jd
+    du = batch * num_caps * caps_dim
+    dw = num_caps * jd * caps_dim
+    return (float((uhat + u + w + cot + du + dw) * ELEM_BYTES),
+            float(uhat * ELEM_BYTES))
+
+
 def _conv_patch_vmem(in_hw: int, cin: int, k: int, out_hw: int) -> int:
     """im2col patch-extraction footprint per grid step (one batch element):
     the resident input feature map plus the emitted patch matrix."""
@@ -382,10 +531,50 @@ def _fused_requirement(dims: CapsNetDims,
                             duration_cycles=duration)
 
 
+def _backward_profile(p: OperationProfile) -> OperationProfile:
+    """Dataflow profile of one operation's backward pass.
+
+    Reverse-mode doubles the MAC work (the d-input and d-weight products
+    are each a forward-sized contraction) and the on-chip access counts
+    with it; the per-component footprints stay the forward's -- the
+    backward kernels reuse the same residencies, swapping ``u_hat`` /
+    activations for their cotangents.
+    """
+    return dataclasses.replace(
+        p, name=p.name + BWD_SUFFIX, macs=2 * p.macs, cycles=2 * p.cycles,
+        data_reads=2 * p.data_reads, data_writes=2 * p.data_writes,
+        weight_reads=2 * p.weight_reads,
+        accum_reads=2 * p.accum_reads, accum_writes=2 * p.accum_writes,
+        offchip_reads=2 * p.offchip_reads,
+        offchip_writes=2 * p.offchip_writes)
+
+
+def _fused_bwd_requirement(dims: CapsNetDims,
+                           profs_bwd: Sequence[OperationProfile],
+                           sched: VotesRoutingSchedule) -> PhaseRequirement:
+    """ONE PMU phase for the fused backward, honest per mode (mirrors
+    ``_fused_requirement``: resident holds votes-sized state across the
+    replay, streamed holds u + the logits trajectory + small temps)."""
+    duration = sum(p.total_cycles for p in profs_bwd)
+    if sched.mode == "resident":
+        req = max(p.total_mem for p in profs_bwd)
+    else:
+        cc = profs_bwd[-1]                       # ClassCaps-FC-bwd
+        bij = dims.num_primary * dims.num_classes
+        jd = dims.num_classes * dims.class_dim
+        req = (cc.data_mem                                   # u resident
+               + (dims.routing_iters + 2) * bij * analysis.ACC_BYTES  # b_t, db
+               + cc.weight_mem                               # W prefetch
+               + 8 * jd * analysis.ACC_BYTES)                # s/ds/dv temps
+    return PhaseRequirement(name=FUSED_NAME + BWD_SUFFIX,
+                            required_bytes=req, duration_cycles=duration)
+
+
 @functools.lru_cache(maxsize=64)
 def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
                  vmem_budget: int = VMEM_BYTES,
-                 dataflow: str = "resident") -> ExecutionPlan:
+                 dataflow: str = "resident",
+                 train: bool = False) -> ExecutionPlan:
     """Compile ``cfg`` into the per-operation ExecutionPlan (memoized:
     plans are immutable and the block-shape DSE runs once per shape).
 
@@ -408,6 +597,14 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
     model -- one phase per EXECUTED op, so the fused megakernel is scored
     as the single phase it runs; ``vmem_bytes`` scale with ``batch``
     where the kernel batches.
+
+    ``train=True`` appends one backward OpPlan per executed kernel, in
+    reverse network order (the order the backward runs): the fused
+    backward gets its own resident/streamed schedule
+    (``plan_votes_routing_bwd`` -- its scratch is larger than the
+    forward's, so the mode can differ), and each conv backward reuses the
+    forward block tiles for its dW / dpatches matmuls and col2im scatter.
+    Backward phases join ``phase_groups()`` so dse/pmu gate them too.
     """
     dims = analysis.dims_from_config(cfg)
     profiles = analysis.capsnet_profiles(dataflow, dims)
@@ -483,8 +680,47 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
         requirement=_fused_requirement(dims, fused_profs, sched),
         profiles=fused_profs))
 
+    if train:
+        # Backward OpPlans, reverse network order.  The fused backward
+        # gets its own schedule DSE (larger scratch than the forward:
+        # a budget can plan forward-only); the conv backwards reuse the
+        # forward tiles for their two (three with the squash recompute)
+        # blocked matmuls plus the col2im scatter, whose peak footprint
+        # matches the forward's (the stages run sequentially).
+        bwd_sched = plan_votes_routing_bwd(
+            dims.num_primary, dims.primary_dim, jd, dims.num_classes,
+            batch=batch, iters=dims.routing_iters, vmem_budget=vmem_budget)
+        bwd_profs = tuple(_backward_profile(p)
+                          for p in reversed(fused_profs))
+        ops.append(OpPlan(
+            name=FUSED_NAME + BWD_SUFFIX, kernel="votes_routing_bwd",
+            workload=bwd_sched.workload, block=None,
+            block_i=bwd_sched.block_i, mode=bwd_sched.mode,
+            vmem_bytes=bwd_sched.vmem_bytes,
+            est_cycles=(votes_cycles * bwd_sched.n_passes
+                        + 2 * routing_cycles),
+            hbm_bytes=votes_routing_bwd_hbm_bytes(
+                batch, dims.num_primary, dims.primary_dim, jd,
+                mode=bwd_sched.mode, iters=dims.routing_iters),
+            uhat_hbm_bytes=0.0,
+            requirement=_fused_bwd_requirement(dims, bwd_profs, bwd_sched),
+            profiles=bwd_profs))
+        for fwd in (ops[1], ops[0]):            # PrimaryCaps, then Conv1
+            wl = fwd.workload
+            matmuls = 3 if fwd.fuses_squash else 2   # + pre-act recompute
+            patches = wl.m * wl.k * ELEM_BYTES       # dpatches write + read
+            prof = _backward_profile(fwd.profile)
+            ops.append(OpPlan(
+                name=fwd.name + BWD_SUFFIX, kernel="conv_im2col_bwd",
+                workload=wl, block=fwd.block, block_rows=fwd.block_rows,
+                vmem_bytes=fwd.vmem_bytes,
+                est_cycles=matmuls * fwd.est_cycles,
+                hbm_bytes=matmuls * fwd.block.hbm_bytes + 2 * patches,
+                requirement=_requirement(prof), profiles=(prof,)))
+
     plan = ExecutionPlan(cfg=cfg, batch=batch, dataflow=dataflow,
-                         vmem_budget=vmem_budget, ops=tuple(ops))
+                         vmem_budget=vmem_budget, ops=tuple(ops),
+                         train=train)
     plan.validate()
     return plan
 

@@ -73,7 +73,10 @@ def schedule_from_plan(memory: SRAMConfig, plan) -> PMUSchedule:
     execute, instead of a hand-built phase list.  The plan emits one
     phase per EXECUTED kernel, so a fused op (the votes+routing
     megakernel) is gated as the single phase it actually runs -- no
-    spurious sector transitions at fused-away operation boundaries.
+    spurious sector transitions at fused-away operation boundaries.  A
+    training plan (``compile_plan(train=True)``) appends one phase per
+    backward kernel in reverse network order, so the same schedule gates
+    a full training step.
     """
     return build_schedule(memory, plan.phase_requirements())
 

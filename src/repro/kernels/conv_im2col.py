@@ -22,11 +22,25 @@ clamps the tail block identically on the input and output side, and each
 rewritten with identical values.  The K axis is different -- a clamped tail
 block would double-count the overlap -- so K is zero-padded up to a
 multiple of ``block_k`` instead (zero rows contribute nothing).
+
+``conv2d_im2col`` carries a ``jax.custom_vjp``, so ``jax.grad`` through the
+Pallas backend works end to end.  The backward pass is Pallas too:
+
+  * dL/dW = patchesT @ dy via ``matmul_at_b`` (a blocked A^T B matmul over
+    the SAME plan ``block_m/k/n`` tiles, with the shared M axis as the
+    zero-padded reduction -- no HBM transpose of the patch slab);
+  * dL/dpatches = dy @ W^T through ``matmul_bias_act`` (the weight
+    transpose is tiny), then dL/dx via the ``col2im_patches`` scatter
+    kernel, the exact transpose of the strided patch extraction;
+  * epilogue cotangents come from the saved output (ReLU mask) or a
+    recomputed pre-activation (per-capsule squash), matching ``jax.grad``
+    of the jnp reference to float32 accuracy.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -147,6 +161,195 @@ def matmul_bias_act(p: jax.Array, w: jax.Array, bias: jax.Array, *,
     )(p, w, bias.reshape(1, n))
 
 
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+def _at_b_kernel(a_ref, b_ref, o_ref):
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32).T, b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_k", "block_n", "interpret"))
+def matmul_at_b(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+                block_k: int = 128, block_n: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """a: [M, K], b: [M, N] -> a^T @ b: [K, N] without an HBM transpose.
+
+    The backward-pass dW matmul (patches^T @ dy): the shared M axis is the
+    reduction here, so like the forward K axis it is zero-padded up to a
+    multiple of ``block_m`` (a clamped tail block would double-count the
+    overlap); ragged K/N tail blocks are rewrite-safe as in the forward.
+    """
+    m, k = a.shape
+    mb, n = b.shape
+    if m != mb:
+        raise ValueError(f"matmul_at_b: M mismatch {m} vs {mb}")
+    bm = max(1, min(block_m, m))
+    bk = max(1, min(block_k, k))
+    bn = max(1, min(block_n, n))
+    if m % bm:
+        pad = bm - m % bm
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+        m += pad
+    return pl.pallas_call(
+        _at_b_kernel,
+        grid=(pl.cdiv(k, bk), pl.cdiv(n, bn), m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda ki, ni, mi: (mi, ki)),
+            pl.BlockSpec((bm, bn), lambda ki, ni, mi: (mi, ni)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda ki, ni, mi: (ki, ni)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _col2im_kernel(dp_ref, o_ref, *, kh: int, kw: int, stride: int,
+                   oh: int, ow: int, h: int, w: int):
+    c = o_ref.shape[-1]
+    dp = dp_ref[0].reshape(oh, ow, kh * kw, c)
+    dx = jnp.zeros((h, w, c), jnp.float32)
+    tap = 0
+    for i in range(kh):                            # static unroll: one strided
+        for j in range(kw):                        # scatter-add per kernel tap
+            dx = dx.at[i:i + (oh - 1) * stride + 1:stride,
+                       j:j + (ow - 1) * stride + 1:stride, :].add(
+                dp[:, :, tap].astype(jnp.float32))
+            tap += 1
+    o_ref[0] = dx.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kh", "kw", "stride", "h", "w", "interpret"))
+def col2im_patches(dp: jax.Array, *, kh: int, kw: int, stride: int,
+                   h: int, w: int, interpret: bool = True) -> jax.Array:
+    """dp: [B, OH*OW, KH*KW*C] -> dx: [B, H, W, C].
+
+    The exact transpose of ``im2col_patches``: each kernel tap's cotangent
+    slab is scatter-added back onto the strided input positions it was
+    sliced from (one grid step per batch element, dx resident in VMEM).
+    """
+    bsz = dp.shape[0]
+    c = dp.shape[2] // (kh * kw)
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    kernel = functools.partial(_col2im_kernel, kh=kh, kw=kw, stride=stride,
+                               oh=oh, ow=ow, h=h, w=w)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, oh * ow, kh * kw * c),
+                               lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, w, c), jnp.float32),
+        interpret=interpret,
+    )(dp)
+
+
+# ---------------------------------------------------------------------------
+# conv2d_im2col: forward + custom VJP
+# ---------------------------------------------------------------------------
+
+class _ConvStatics(NamedTuple):
+    """Hashable non-differentiable schedule for the conv custom_vjp."""
+
+    stride: int
+    block_m: int
+    block_k: int
+    block_n: int
+    epilogue: str
+    squash_dim: int
+    interpret: bool
+
+
+def _conv_apply(st: _ConvStatics, x, w, bias):
+    b, h, w_hw, cin = x.shape
+    kh, kw, _, cout = w.shape
+    oh = (h - kh) // st.stride + 1
+    ow = (w_hw - kw) // st.stride + 1
+    patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
+                             interpret=st.interpret)
+    out = matmul_bias_act(
+        patches.reshape(b * oh * ow, kh * kw * cin),
+        w.reshape(kh * kw * cin, cout), bias,
+        block_m=st.block_m, block_k=st.block_k, block_n=st.block_n,
+        epilogue=st.epilogue, squash_dim=st.squash_dim,
+        interpret=st.interpret)
+    return out.reshape(b, oh, ow, cout).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv_core(st: _ConvStatics, x, w, bias):
+    return _conv_apply(st, x, w, bias)
+
+
+def _conv_core_fwd(st: _ConvStatics, x, w, bias):
+    out = _conv_apply(st, x, w, bias)
+    # Only the ReLU backward reads the saved output (its mask); keeping
+    # the [B,OH,OW,Cout] activation alive to the backward for the other
+    # epilogues would waste the largest conv tensor per layer per step.
+    return out, (x, w, bias, out if st.epilogue == "relu" else None)
+
+
+def _conv_core_bwd(st: _ConvStatics, res, dy):
+    x, w, bias, out = res
+    b, h, w_hw, cin = x.shape
+    kh, kw, _, cout = w.shape
+    oh = (h - kh) // st.stride + 1
+    ow = (w_hw - kw) // st.stride + 1
+    m = b * oh * ow
+    kk = kh * kw * cin
+    dy2 = dy.reshape(m, cout).astype(jnp.float32)
+    w2 = w.reshape(kk, cout)
+    patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
+                             interpret=st.interpret)
+    p2 = patches.reshape(m, kk)
+
+    # Epilogue cotangent: ReLU masks from the saved output; the fused
+    # per-capsule squash recomputes the pre-activation (one extra blocked
+    # matmul -- the recompute the backward plan accounts for).
+    if st.epilogue == "relu":
+        dpre = dy2 * (out.reshape(m, cout) > 0)
+    elif st.epilogue == "squash":
+        pre = matmul_bias_act(p2, w2, bias, block_m=st.block_m,
+                              block_k=st.block_k, block_n=st.block_n,
+                              epilogue="none", interpret=st.interpret)
+        caps = pre.reshape(m, cout // st.squash_dim, st.squash_dim)
+        _, pull = jax.vjp(squash_reference, caps)
+        dpre = pull(dy2.reshape(caps.shape))[0].reshape(m, cout)
+    else:
+        dpre = dy2
+
+    dbias = jnp.sum(dpre, axis=0).astype(bias.dtype)
+    dw = matmul_at_b(p2, dpre, block_m=st.block_m, block_k=st.block_k,
+                     block_n=st.block_n, interpret=st.interpret)
+    dpatches = matmul_bias_act(
+        dpre, jnp.transpose(w2).astype(jnp.float32),
+        jnp.zeros((kk,), jnp.float32),
+        block_m=st.block_m, block_k=st.block_n, block_n=st.block_k,
+        epilogue="none", interpret=st.interpret)
+    dx = col2im_patches(dpatches.reshape(b, oh * ow, kk), kh=kh, kw=kw,
+                        stride=st.stride, h=h, w=w_hw,
+                        interpret=st.interpret)
+    return (dx.astype(x.dtype), dw.reshape(w.shape).astype(w.dtype), dbias)
+
+
+_conv_core.defvjp(_conv_core_fwd, _conv_core_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "block_m", "block_k", "block_n", "epilogue", "squash_dim",
+    "interpret"))
 def conv2d_im2col(x: jax.Array, w: jax.Array, bias: jax.Array, *,
                   stride: int = 1, block_m: int = 128, block_k: int = 128,
                   block_n: int = 128, epilogue: str = "none",
@@ -155,16 +358,11 @@ def conv2d_im2col(x: jax.Array, w: jax.Array, bias: jax.Array, *,
 
     Returns ``epilogue(conv(x, w) + bias)`` as [B, OH, OW, Cout].  Block
     shapes come from the ExecutionPlan (see ``kernels/ops.py``).
+    Differentiable: carries a custom VJP whose backward runs the Pallas
+    ``matmul_at_b`` (dW), ``matmul_bias_act`` (dpatches) and
+    ``col2im_patches`` (dx) kernels over the same block tiles.
     """
-    b, h, w_hw, cin = x.shape
-    kh, kw, _, cout = w.shape
-    oh = (h - kh) // stride + 1
-    ow = (w_hw - kw) // stride + 1
-    patches = im2col_patches(x, kh=kh, kw=kw, stride=stride,
-                             interpret=interpret)
-    out = matmul_bias_act(
-        patches.reshape(b * oh * ow, kh * kw * cin),
-        w.reshape(kh * kw * cin, cout), bias,
-        block_m=block_m, block_k=block_k, block_n=block_n,
-        epilogue=epilogue, squash_dim=squash_dim, interpret=interpret)
-    return out.reshape(b, oh, ow, cout).astype(x.dtype)
+    st = _ConvStatics(stride=stride, block_m=block_m, block_k=block_k,
+                      block_n=block_n, epilogue=epilogue,
+                      squash_dim=squash_dim, interpret=interpret)
+    return _conv_core(st, x, w, bias)

@@ -42,7 +42,9 @@ def conv2d(x, w, b, *, stride: int = 1, plan_op=None, epilogue: str = "none",
     ``plan.op("PrimaryCaps")``); without one the planner pick is computed
     once per shape and memoized.  A plan op that fuses the squash
     activation (``plan_op.fuses_squash``) forces the squash epilogue --
-    callers only supply ``squash_dim``.
+    callers only supply ``squash_dim``.  Differentiable: the kernel's
+    custom VJP reuses the same block tiles for the backward matmuls and
+    the col2im scatter.
     """
     if plan_op is not None:
         bm, bk, bn = (plan_op.block.block_m, plan_op.block.block_k,
@@ -110,13 +112,34 @@ def planned_votes_routing(num_caps: int, caps_dim: int, jd: int,
     return sched.mode, sched.block_i
 
 
+@functools.lru_cache(maxsize=64)
+def planned_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int,
+                              num_classes: int, iters: int, batch: int,
+                              vmem_budget: int = VMEM_BYTES
+                              ) -> tuple[str, int]:
+    """Memoized (mode, block_i) decision for the fused BACKWARD kernel
+    (independent of the forward's: its scratch is larger)."""
+    sched = execplan.plan_votes_routing_bwd(
+        num_caps, caps_dim, jd, num_classes, batch=batch, iters=iters,
+        vmem_budget=vmem_budget)
+    return sched.mode, sched.block_i
+
+
 def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
                   iters: int | None = None, num_classes: int | None = None,
                   mode: str | None = None, block_i: int | None = None,
+                  bwd_mode: str | None = None, bwd_block_i: int | None = None,
                   interpret: bool = True) -> jax.Array:
     """u: [B, I, C], w: [I, J*D, C] -> v: [B, J*D]: fused votes + routing
     (u_hat never leaves the chip).  Schedule (``mode``/``block_i``) comes
-    from ``plan.op("ClassCaps-Routing")`` or the memoized plan decision."""
+    from ``plan.op("ClassCaps-Routing")`` or the memoized plan decision.
+
+    Differentiable: under ``jax.grad`` the backward schedule
+    (``bwd_mode``/``bwd_block_i``) comes from the plan's backward op
+    (``compile_plan(train=True)``), falling back to the memoized backward
+    plan decision at the plan's VMEM budget -- ``d u_hat`` stays on-chip
+    either way.
+    """
     if iters is None:
         iters = plan.cfg.routing_iters if plan is not None else 3
     if num_classes is None:
@@ -139,8 +162,29 @@ def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
                 u.shape[0])
             mode = mode or pmode
             block_i = block_i or pbi
+    if bwd_mode is None or bwd_block_i is None:
+        budget = plan.vmem_budget if plan is not None else VMEM_BYTES
+        bwd_op = None
+        if plan is not None and plan.train:
+            bwd_op = plan.op(execplan.FUSED_NAME + execplan.BWD_SUFFIX)
+        if bwd_op is not None:
+            bwd_mode = bwd_mode or bwd_op.mode
+            bwd_block_i = bwd_block_i or bwd_op.block_i
+        else:
+            try:
+                pbmode, pbbi = planned_votes_routing_bwd(
+                    u.shape[1], u.shape[2], w.shape[1], num_classes, iters,
+                    u.shape[0], budget)
+            except execplan.PlanError:
+                # Forward-only callers must not fail on backward planning;
+                # a caller who then differentiates anyway gets the forward
+                # schedule (numerically correct, footprint model exceeded).
+                pbmode, pbbi = mode, block_i
+            bwd_mode = bwd_mode or pbmode
+            bwd_block_i = bwd_block_i or pbbi
     return _votes_routing(u, w, iters=iters, num_classes=num_classes,
-                          mode=mode, block_i=block_i, interpret=interpret)
+                          mode=mode, block_i=block_i, bwd_mode=bwd_mode,
+                          bwd_block_i=bwd_block_i, interpret=interpret)
 
 
 def squash(x: jax.Array, *, plan=None, block_rows: int | None = None,
@@ -167,4 +211,5 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
 
 __all__ = ["conv2d", "caps_votes", "routing", "votes_routing", "squash",
            "rmsnorm", "flash_attention", "planned_block_i",
-           "planned_conv_blocks", "planned_votes_routing", "ref"]
+           "planned_conv_blocks", "planned_votes_routing",
+           "planned_votes_routing_bwd", "ref"]

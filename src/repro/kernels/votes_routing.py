@@ -35,11 +35,41 @@ Both schedules zero-pad the capsule axis up to a multiple of ``block_i``
 double-count rows under the i-reduction, while zero rows contribute
 nothing to ``s``, leave their logits at the uniform initialisation, and
 never perturb the real capsules.
+
+**Backward** (``jax.custom_vjp``): the cotangent of the votes, ``d u_hat``
+-- as large as ``u_hat`` itself -- never touches HBM either.  Both
+backward kernels recompute the routing iterations from the saved ``(u,
+W)`` residuals entirely in VMEM scratch, honoring the jnp reference's
+``stop_gradient(u_hat)`` convention (the logits updates and every s-sum
+but the last iteration's are u_hat-constant under ``jax.grad``):
+
+  resident  grid ``(2, num_i_blocks)``.  Pass 0 rebuilds the votes into
+            the same ``[B, I_pad, J*D]`` scratch the forward used and, at
+            the last i-block, replays every routing iteration on-chip and
+            overwrites the scratch with ``d u_hat`` in place (the exact
+            ``jax.vjp`` of the reference replay).  Pass 1 contracts each
+            ``d u_hat`` i-block against the streamed ``W``/``u`` tiles
+            into ``du`` / ``dW`` block outputs.
+
+  streamed  grid ``(2*iters + 4, num_i_blocks)``.  Passes ``0..2T``
+            replay the forward with a ROLLING pair of logits slabs (the
+            stop-gradient convention means only ``b_{T-1}`` / ``b_T``
+            are ever consumed again, so slot ``t % 2`` suffices); pass
+            ``2T+1`` seeds ``db_T`` from the output cotangent; pass
+            ``2T+2`` accumulates ``dv_{T-1} = sum_i u_hat . db_T`` and
+            squash-vjps it into ``ds_{T-1}``; the final pass emits
+            ``du``/``dW`` per i-block from ``d u_hat = c_T (x) ds_T +
+            c_{T-1} (x) ds_{T-1}`` without ever materializing it beyond
+            one i-block.  There is NO deep reverse recurrence: with the
+            logits updates u_hat-constant, ``db_t`` for ``t < T`` feeds
+            nothing -- the backward is exactly one seed + one reverse
+            pass, regardless of the iteration count.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -127,53 +157,228 @@ def _streamed_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *, iters: int,
             "bijd,bjd->bij", uh4, v)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "iters", "num_classes", "mode", "block_i", "interpret"))
-def votes_routing(u: jax.Array, w: jax.Array, *, iters: int = 3,
-                  num_classes: int = 10, mode: str = "resident",
-                  block_i: int = 128, interpret: bool = True) -> jax.Array:
-    """u: [B, I, C], w: [I, J*D, C] -> v: [B, J*D]; votes + full routing.
+# ---------------------------------------------------------------------------
+# Backward kernels: d u_hat stays in VMEM scratch, like u_hat itself
+# ---------------------------------------------------------------------------
 
-    ``mode``/``block_i`` come from the ExecutionPlan
-    (``plan.op("ClassCaps-Routing")``); see ``repro.kernels.ops`` for the
-    plan-aware wrapper.  The split ``caps_votes`` -> ``routing`` pair
-    remains available as the oracle/fallback path.
+def _routing_ref_sg(uh4, *, iters: int):
+    """Gradient-faithful replay of ``capsnet.routing_by_agreement``.
+
+    Values match ``_routing_iterations``; under ``jax.vjp`` it honors the
+    reference's ``stop_gradient(u_hat)`` convention: the logits update is
+    always u_hat-constant, and the s-sum carries u_hat gradient only on
+    the LAST body iteration (plus the final readout).
     """
+    uh_ng = jax.lax.stop_gradient(uh4)
+    b = jnp.zeros(uh4.shape[:3], jnp.float32)
+    for it in range(iters):
+        c = jax.nn.softmax(b, axis=2)
+        u_used = uh4 if it == iters - 1 else uh_ng
+        v = squash(jnp.einsum("bij,bijd->bjd", c, u_used))
+        b = b + jnp.einsum("bijd,bjd->bij", uh_ng, v)
+    c = jax.nn.softmax(b, axis=2)
+    return squash(jnp.einsum("bij,bijd->bjd", c, uh4))
+
+
+def _softmax_bwd(c, dc):
+    """VJP of softmax over the class axis given its OUTPUT c."""
+    return c * (dc - jnp.sum(c * dc, axis=2, keepdims=True))
+
+
+def _squash_bwd(s, dv):
+    """VJP of the reference squash at pre-activation s."""
+    _, pull = jax.vjp(squash, s)
+    return pull(dv)[0]
+
+
+def _resident_bwd_kernel(u_ref, w_ref, g_ref, du_ref, dw_ref, votes_scr, *,
+                         iters: int, j: int, d: int, n_blocks: int,
+                         block_i: int):
+    p = pl.program_id(0)
+    ib = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _():  # rebuild the votes, then overwrite them with d u_hat in place
+        votes_scr[:, pl.ds(ib * block_i, block_i), :] = _votes_block(
+            u_ref[...], w_ref[...])
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            bsz, i_pad, jd = votes_scr.shape
+            uh4 = votes_scr[...].reshape(bsz, i_pad, j, d)
+            _, pull = jax.vjp(
+                functools.partial(_routing_ref_sg, iters=iters), uh4)
+            duh = pull(g_ref[...].astype(jnp.float32).reshape(bsz, j, d))[0]
+            votes_scr[...] = duh.reshape(bsz, i_pad, jd)
+
+    @pl.when(p == 1)
+    def _():  # contract each d u_hat i-block against the streamed tiles
+        duh = votes_scr[:, pl.ds(ib * block_i, block_i), :]
+        du_ref[...] = jnp.einsum(
+            "bin,inc->bic", duh, w_ref[...].astype(jnp.float32)
+        ).astype(du_ref.dtype)
+        dw_ref[...] = jnp.einsum(
+            "bin,bic->inc", duh, u_ref[...].astype(jnp.float32)
+        ).astype(dw_ref.dtype)
+
+
+def _streamed_bwd_kernel(u_ref, w_ref, g_ref, du_ref, dw_ref, b2_scr,
+                         s2_scr, db_scr, ds_last_scr, ds_prev_scr, acc_scr,
+                         v_scr, *, iters: int, j: int, d: int,
+                         n_blocks: int, block_i: int):
+    t_total = iters
+    p = pl.program_id(0)
+    ib = pl.program_id(1)
+    row0 = ib * block_i
+    rows = pl.ds(row0, block_i)
+    bsz = u_ref.shape[0]
+    u_blk = u_ref[:, rows, :]
+    uh4 = _votes_block(u_blk, w_ref[...]).reshape(bsz, block_i, j, d)
+
+    # Only b_{T-1}/b_T and s_{T-1}/s_T are ever consumed again (the
+    # stop-gradient convention kills the deeper reverse chain), so the
+    # replay keeps a rolling PAIR of slabs indexed by t % 2: the b-pass
+    # at t overwrites slot (t+1) % 2 = b_{t-1}, which is already dead.
+    slot_last = t_total % 2
+    slot_prev = (t_total - 1) % 2
+
+    # ---- forward replay (passes 0 .. 2T) ----
+    t_fwd = p // 2
+
+    @pl.when((p == 0) & (ib == 0))
+    def _():
+        b2_scr[pl.ds(0, 1)] = jnp.zeros_like(b2_scr[pl.ds(0, 1)])
+
+    @pl.when((p <= 2 * t_total) & (p % 2 == 0))
+    def _():  # s-pass of iteration t_fwd (t_fwd == T is the final readout)
+        @pl.when(ib == 0)
+        def _():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        c = jax.nn.softmax(b2_scr[pl.ds(t_fwd % 2, 1), :, rows, :][0],
+                           axis=2)
+        acc_scr[...] += jnp.einsum("bij,bijd->bjd", c, uh4).reshape(bsz,
+                                                                    j * d)
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            s2_scr[pl.ds(t_fwd % 2, 1)] = acc_scr[...][None]
+            v_scr[...] = squash(
+                acc_scr[...].reshape(bsz, j, d)).reshape(bsz, j * d)
+
+    @pl.when((p <= 2 * t_total) & (p % 2 == 1))
+    def _():  # b-pass: b_{t+1} = b_t + <u_hat, v_t>, into the other slot
+        b_blk = b2_scr[pl.ds(t_fwd % 2, 1), :, rows, :][0]
+        v = v_scr[...].reshape(bsz, j, d)
+        b2_scr[pl.ds((t_fwd + 1) % 2, 1), :, rows, :] = (
+            b_blk + jnp.einsum("bijd,bjd->bij", uh4, v))[None]
+
+    # ---- seed (pass 2T+1): ds_T from the cotangent, db_T ----
+    @pl.when(p == 2 * t_total + 1)
+    def _():
+        @pl.when(ib == 0)
+        def _():
+            ds = _squash_bwd(
+                s2_scr[pl.ds(slot_last, 1)][0].reshape(bsz, j, d),
+                g_ref[...].astype(jnp.float32).reshape(bsz, j, d))
+            ds_last_scr[...] = ds.reshape(bsz, j * d)
+
+        ds = ds_last_scr[...].reshape(bsz, j, d)
+        dc = jnp.einsum("bijd,bjd->bij", uh4, ds)
+        c = jax.nn.softmax(b2_scr[pl.ds(slot_last, 1), :, rows, :][0],
+                           axis=2)
+        db_scr[:, rows, :] = _softmax_bwd(c, dc)
+
+    # ---- one reverse pass (2T+2): dv_{T-1} = sum_i u_hat . db_T ----
+    @pl.when(p == 2 * t_total + 2)
+    def _():
+        @pl.when(ib == 0)
+        def _():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        acc_scr[...] += jnp.einsum("bijd,bij->bjd", uh4,
+                                   db_scr[:, rows, :]).reshape(bsz, j * d)
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            ds = _squash_bwd(s2_scr[pl.ds(slot_prev, 1)][0].reshape(bsz, j, d),
+                             acc_scr[...].reshape(bsz, j, d))
+            ds_prev_scr[...] = ds.reshape(bsz, j * d)
+
+    # ---- emit (pass 2T+3): d u_hat one i-block at a time -> du, dW ----
+    @pl.when(p == 2 * t_total + 3)
+    def _():
+        c_last = jax.nn.softmax(
+            b2_scr[pl.ds(slot_last, 1), :, rows, :][0], axis=2)
+        c_prev = jax.nn.softmax(
+            b2_scr[pl.ds(slot_prev, 1), :, rows, :][0], axis=2)
+        ds_last = ds_last_scr[...].reshape(bsz, j, d)
+        ds_prev = ds_prev_scr[...].reshape(bsz, j, d)
+        duh = (c_last[..., None] * ds_last[:, None]
+               + c_prev[..., None] * ds_prev[:, None]).reshape(
+                   bsz, block_i, j * d)
+        du_ref[...] = jnp.einsum(
+            "bin,inc->bic", duh, w_ref[...].astype(jnp.float32)
+        ).astype(du_ref.dtype)
+        dw_ref[...] = jnp.einsum(
+            "bin,bic->inc", duh, u_blk.astype(jnp.float32)
+        ).astype(dw_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward dispatch + custom VJP
+# ---------------------------------------------------------------------------
+
+class _VRStatics(NamedTuple):
+    """Hashable non-differentiable schedule for the fused custom_vjp."""
+
+    iters: int
+    num_classes: int
+    mode: str
+    block_i: int
+    bwd_mode: str
+    bwd_block_i: int
+    interpret: bool
+
+
+def _padded(u, w, block_i: int):
     bsz, i_dim, c = u.shape
-    _, jd, _ = w.shape
-    j = num_classes
-    if jd % j:
-        raise ValueError(f"votes dim {jd} not divisible by classes {j}")
-    if mode not in MODES:
-        raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
-    d = jd // j
-    block_i = max(1, min(block_i, i_dim))
     n_blocks = pl.cdiv(i_dim, block_i)
     i_pad = n_blocks * block_i
     if i_pad != i_dim:                     # zero-pad the reduction axis: a
         u = jnp.pad(u, ((0, 0), (0, i_pad - i_dim), (0, 0)))   # clamped tail
         w = jnp.pad(w, ((0, i_pad - i_dim), (0, 0), (0, 0)))   # would double-
-    out_shape = jax.ShapeDtypeStruct((bsz, jd), u.dtype)       # count rows
+    return u, w, n_blocks, i_pad                               # count rows
 
-    if mode == "resident":
-        kernel = functools.partial(_resident_kernel, iters=iters, j=j, d=d,
-                                   n_blocks=n_blocks, block_i=block_i)
+
+def _vr_apply(st: _VRStatics, u, w):
+    bsz, i_dim, c = u.shape
+    _, jd, _ = w.shape
+    j = st.num_classes
+    d = jd // j
+    u, w, n_blocks, i_pad = _padded(u, w, st.block_i)
+    out_shape = jax.ShapeDtypeStruct((bsz, jd), u.dtype)
+
+    if st.mode == "resident":
+        kernel = functools.partial(_resident_kernel, iters=st.iters, j=j,
+                                   d=d, n_blocks=n_blocks,
+                                   block_i=st.block_i)
         return pl.pallas_call(
             kernel,
             grid=(n_blocks,),
             in_specs=[
-                pl.BlockSpec((bsz, block_i, c), lambda ib: (0, ib, 0)),
-                pl.BlockSpec((block_i, jd, c), lambda ib: (ib, 0, 0)),
+                pl.BlockSpec((bsz, st.block_i, c), lambda ib: (0, ib, 0)),
+                pl.BlockSpec((st.block_i, jd, c), lambda ib: (ib, 0, 0)),
             ],
             out_specs=pl.BlockSpec((bsz, jd), lambda ib: (0, 0)),
             out_shape=out_shape,
             scratch_shapes=[pltpu.VMEM((bsz, i_pad, jd), jnp.float32)],
-            interpret=interpret,
+            interpret=st.interpret,
         )(u, w)
 
-    n_passes = 2 * iters + 1
-    kernel = functools.partial(_streamed_kernel, iters=iters, j=j, d=d,
-                               n_blocks=n_blocks, block_i=block_i,
+    n_passes = 2 * st.iters + 1
+    kernel = functools.partial(_streamed_kernel, iters=st.iters, j=j, d=d,
+                               n_blocks=n_blocks, block_i=st.block_i,
                                n_passes=n_passes)
     return pl.pallas_call(
         kernel,
@@ -182,7 +387,7 @@ def votes_routing(u: jax.Array, w: jax.Array, *, iters: int = 3,
             # u: constant index map -> fetched once, resident for the run
             pl.BlockSpec((bsz, i_pad, c), lambda p, ib: (0, 0, 0)),
             # W: re-streamed every pass (the votes are recomputed on-chip)
-            pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0)),
+            pl.BlockSpec((st.block_i, jd, c), lambda p, ib: (ib, 0, 0)),
         ],
         out_specs=pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)),
         out_shape=out_shape,
@@ -191,5 +396,121 @@ def votes_routing(u: jax.Array, w: jax.Array, *, iters: int = 3,
             pltpu.VMEM((bsz, jd), jnp.float32),         # s accumulator
             pltpu.VMEM((bsz, jd), jnp.float32),         # squashed v
         ],
-        interpret=interpret,
+        interpret=st.interpret,
     )(u, w)
+
+
+def _vr_grad(st: _VRStatics, u, w, g):
+    """Backward dispatch: returns (du, dw) via the mode's Pallas kernel."""
+    bsz, i_dim, c = u.shape
+    _, jd, _ = w.shape
+    j = st.num_classes
+    d = jd // j
+    block_i = max(1, min(st.bwd_block_i, i_dim))
+    u_p, w_p, n_blocks, i_pad = _padded(u, w, block_i)
+    out_shapes = [jax.ShapeDtypeStruct((bsz, i_pad, c), u.dtype),
+                  jax.ShapeDtypeStruct((i_pad, jd, c), w.dtype)]
+    du_spec = pl.BlockSpec((bsz, block_i, c), lambda p, ib: (0, ib, 0))
+    dw_spec = pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0))
+
+    if st.bwd_mode == "resident":
+        kernel = functools.partial(_resident_bwd_kernel, iters=st.iters,
+                                   j=j, d=d, n_blocks=n_blocks,
+                                   block_i=block_i)
+        du, dw = pl.pallas_call(
+            kernel,
+            grid=(2, n_blocks),
+            in_specs=[
+                pl.BlockSpec((bsz, block_i, c), lambda p, ib: (0, ib, 0)),
+                pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0)),
+                pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)),
+            ],
+            out_specs=[du_spec, dw_spec],
+            out_shape=out_shapes,
+            scratch_shapes=[pltpu.VMEM((bsz, i_pad, jd), jnp.float32)],
+            interpret=st.interpret,
+        )(u_p, w_p, g)
+    else:
+        t = st.iters
+        kernel = functools.partial(_streamed_bwd_kernel, iters=t, j=j, d=d,
+                                   n_blocks=n_blocks, block_i=block_i)
+        du, dw = pl.pallas_call(
+            kernel,
+            grid=(2 * t + 4, n_blocks),
+            in_specs=[
+                pl.BlockSpec((bsz, i_pad, c), lambda p, ib: (0, 0, 0)),
+                pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0)),
+                pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)),
+            ],
+            out_specs=[du_spec, dw_spec],
+            out_shape=out_shapes,
+            scratch_shapes=[
+                pltpu.VMEM((2, bsz, i_pad, j), jnp.float32),  # b: rolling pair
+                pltpu.VMEM((2, bsz, jd), jnp.float32),        # s_{T-1}, s_T
+                pltpu.VMEM((bsz, i_pad, j), jnp.float32),     # db_T
+                pltpu.VMEM((bsz, jd), jnp.float32),           # ds_T
+                pltpu.VMEM((bsz, jd), jnp.float32),           # ds_{T-1}
+                pltpu.VMEM((bsz, jd), jnp.float32),           # s/dv acc
+                pltpu.VMEM((bsz, jd), jnp.float32),           # v
+            ],
+            interpret=st.interpret,
+        )(u_p, w_p, g)
+    return du[:, :i_dim, :], dw[:i_dim]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _vr_core(st: _VRStatics, u, w):
+    return _vr_apply(st, u, w)
+
+
+def _vr_core_fwd(st: _VRStatics, u, w):
+    return _vr_apply(st, u, w), (u, w)
+
+
+def _vr_core_bwd(st: _VRStatics, res, g):
+    u, w = res
+    return _vr_grad(st, u, w, g)
+
+
+_vr_core.defvjp(_vr_core_fwd, _vr_core_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "iters", "num_classes", "mode", "block_i", "bwd_mode", "bwd_block_i",
+    "interpret"))
+def votes_routing(u: jax.Array, w: jax.Array, *, iters: int = 3,
+                  num_classes: int = 10, mode: str = "resident",
+                  block_i: int = 128, bwd_mode: str | None = None,
+                  bwd_block_i: int | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """u: [B, I, C], w: [I, J*D, C] -> v: [B, J*D]; votes + full routing.
+
+    ``mode``/``block_i`` come from the ExecutionPlan
+    (``plan.op("ClassCaps-Routing")``); see ``repro.kernels.ops`` for the
+    plan-aware wrapper.  The split ``caps_votes`` -> ``routing`` pair
+    remains available as the oracle/fallback path.
+
+    Differentiable: ``jax.grad`` runs the mode's backward Pallas kernel
+    (``bwd_mode``/``bwd_block_i``, defaulting to the forward schedule --
+    the plan chooses them independently because the backward's scratch is
+    larger), recomputing the routing iterations from the saved ``(u, W)``
+    residuals so neither ``u_hat`` nor its cotangent touches HBM.
+    """
+    bsz, i_dim, c = u.shape
+    _, jd, _ = w.shape
+    j = num_classes
+    if jd % j:
+        raise ValueError(f"votes dim {jd} not divisible by classes {j}")
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
+    if iters < 1:
+        raise ValueError(f"routing needs iters >= 1, got {iters}")
+    bwd_mode = bwd_mode or mode
+    if bwd_mode not in MODES:
+        raise ValueError(f"unknown bwd_mode {bwd_mode!r}; choose from {MODES}")
+    st = _VRStatics(iters=iters, num_classes=num_classes, mode=mode,
+                    block_i=max(1, min(block_i, i_dim)),
+                    bwd_mode=bwd_mode,
+                    bwd_block_i=max(1, min(bwd_block_i or block_i, i_dim)),
+                    interpret=interpret)
+    return _vr_core(st, u, w)

@@ -1,3 +1,6 @@
+# NOTE: capsnet_loop is intentionally NOT re-exported here -- it is a
+# `python -m repro.train.capsnet_loop` CLI, and importing it from the
+# package __init__ would trigger runpy's double-import RuntimeWarning.
 from repro.train.checkpoint import AsyncCheckpointer, restore, save  # noqa: F401
 from repro.train.data import DataConfig, DataIterator  # noqa: F401
 from repro.train.loop import LoopConfig, TrainLoop  # noqa: F401

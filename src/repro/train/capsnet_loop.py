@@ -1,0 +1,214 @@
+"""Fault-tolerant CapsuleNet training through the Pallas backend.
+
+The custom VJPs (``kernels/conv_im2col``, ``kernels/votes_routing``,
+``kernels/squash``) make ``backend="pallas"`` differentiable end to end,
+so the margin-loss + masked-reconstruction objective trains through the
+SAME plan-driven kernels that serve inference -- with the backward
+schedule pinned by ``compile_plan(train=True)`` (backward OpPlans:
+per-mode VMEM footprints, ``u_hat``/``d u_hat`` never in HBM).
+
+The loop reuses the repo's production training machinery on the CapsNet
+objective:
+
+  * checkpoint/restart: async atomic checkpoints every N steps
+    (``train.checkpoint``), resume from the latest committed step with
+    deterministic data skip-ahead;
+  * NaN/divergence guard: a non-finite loss rolls params back to the
+    last committed checkpoint and skips the offending batch;
+  * heartbeat: a JSON heartbeat file per step for a supervisor.
+
+CLI:  python -m repro.train.capsnet_loop --steps 20 --backend pallas
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import capsnet
+from repro.core.capsnet import CapsNetConfig
+from repro.core.execplan import compile_plan
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, mnist_batch
+
+SMOKE = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
+                      pc_kernel=3, num_primary_groups=4, primary_dim=4,
+                      class_dim=8, decoder_hidden=(32, 64))
+CONFIGS = {"smoke": SMOKE, "mnist": CapsNetConfig()}
+
+
+@dataclasses.dataclass
+class CapsLoopConfig:
+    total_steps: int = 20
+    batch: int = 16
+    lr: float = 3e-2
+    ckpt_every: int = 10
+    ckpt_dir: str = "caps_checkpoints"
+    keep: int = 3
+    log_every: int = 5
+    backend: str = "pallas"
+    interpret: bool = True
+    max_nan_skips: int = 5
+    heartbeat_path: str | None = None
+    seed: int = 0
+
+
+class CapsTrainLoop:
+    """SGD over ``capsnet.total_loss`` with checkpoint + NaN-guard."""
+
+    def __init__(self, cfg: CapsNetConfig = SMOKE,
+                 loop_cfg: CapsLoopConfig = CapsLoopConfig()):
+        self.cfg = cfg
+        self.loop_cfg = loop_cfg
+        self.step = 0
+        self.nan_skips = 0
+        self._last_committed = 0         # latest step THIS run checkpointed
+        self.history: list[dict] = []
+        self.checkpointer = ckpt.AsyncCheckpointer(loop_cfg.ckpt_dir,
+                                                   keep=loop_cfg.keep)
+        self.data_cfg = DataConfig(kind="mnist",
+                                   global_batch=loop_cfg.batch,
+                                   seed=loop_cfg.seed)
+        # ONE training plan: pins both the forward schedule and the
+        # backward OpPlans the custom VJPs execute.
+        self.plan = (compile_plan(cfg, batch=loop_cfg.batch, train=True)
+                     if loop_cfg.backend == "pallas" else None)
+
+        def step_fn(params, images, labels):
+            (_, metrics), grads = jax.value_and_grad(
+                capsnet.total_loss, has_aux=True)(
+                    params, images, labels, cfg,
+                    backend=loop_cfg.backend, plan=self.plan,
+                    interpret=loop_cfg.interpret)
+            params = jax.tree_util.tree_map(
+                lambda p, g: p - loop_cfg.lr * g, params, grads)
+            return params, metrics
+
+        self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    # -- state ----------------------------------------------------------------
+    def init_params(self):
+        return capsnet.init_params(jax.random.PRNGKey(self.loop_cfg.seed),
+                                   self.cfg)
+
+    def try_restore(self, params):
+        latest = ckpt.latest_step(self.loop_cfg.ckpt_dir)
+        if latest is None:
+            return params, 0
+        restored, manifest = ckpt.restore({"params": params},
+                                          self.loop_cfg.ckpt_dir)
+        return restored["params"], manifest["step"]
+
+    def _batch(self, step: int) -> dict:
+        return mnist_batch(self.data_cfg, step,
+                           image_hw=self.cfg.image_hw)
+
+    def _heartbeat(self, step: int, loss: float) -> None:
+        if self.loop_cfg.heartbeat_path is None:
+            return
+        p = pathlib.Path(self.loop_cfg.heartbeat_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps({"step": step, "time": time.time(),
+                                   "loss": loss}))
+        tmp.rename(p)
+
+    # -- main -----------------------------------------------------------------
+    def run(self, resume: bool = True) -> list[dict]:
+        params = self.init_params()
+        start = 0
+        if resume:
+            params, start = self.try_restore(params)
+        if start == 0:
+            ckpt.save({"params": params}, self.loop_cfg.ckpt_dir, 0,
+                      extra={"backend": self.loop_cfg.backend})
+        self.step = start
+        self._last_committed = start
+
+        while self.step < self.loop_cfg.total_steps:
+            batch = self._batch(self.step)
+            t0 = time.time()
+            params, metrics = self._step_fn(params, batch["images"],
+                                            batch["labels"])
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = time.time() - t0
+
+            if not np.isfinite(loss):
+                # Roll back to THIS run's last committed checkpoint (a
+                # shared ckpt_dir may hold later steps from an abandoned
+                # run -- `latest_step` would silently resurrect them),
+                # then skip the poisoned batch.
+                self.nan_skips += 1
+                if self.nan_skips > self.loop_cfg.max_nan_skips:
+                    raise RuntimeError("too many non-finite steps")
+                self.checkpointer.wait()
+                restored, _ = ckpt.restore({"params": self.init_params()},
+                                           self.loop_cfg.ckpt_dir,
+                                           step=self._last_committed)
+                params = restored["params"]
+                self.step += 1             # drop the poisoned batch
+                continue
+
+            self.step += 1
+            rec = {"step": self.step, "loss": loss,
+                   "accuracy": float(jax.device_get(metrics["accuracy"])),
+                   "time_s": dt}
+            self.history.append(rec)
+            self._heartbeat(self.step, loss)
+            if self.step % self.loop_cfg.log_every == 0:
+                print(f"step {self.step:6d} loss {loss:9.4f} "
+                      f"acc {rec['accuracy']:5.2f} {dt * 1e3:7.1f} ms",
+                      flush=True)
+            if self.step % self.loop_cfg.ckpt_every == 0 \
+                    or self.step == self.loop_cfg.total_steps:
+                self.checkpointer.save_async(
+                    {"params": params}, self.step,
+                    extra={"backend": self.loop_cfg.backend})
+                self._last_committed = self.step
+
+        self.checkpointer.wait()
+        return self.history
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--backend", choices=("jnp", "pallas"),
+                    default="pallas")
+    ap.add_argument("--config", choices=sorted(CONFIGS), default="smoke")
+    ap.add_argument("--ckpt-dir", default="caps_checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--assert-improves", action="store_true",
+                    help="exit nonzero unless the loss decreased and no "
+                         "NaN-guard rollback fired (the CI smoke gate)")
+    args = ap.parse_args(argv)
+
+    loop = CapsTrainLoop(CONFIGS[args.config], CapsLoopConfig(
+        total_steps=args.steps, batch=args.batch, lr=args.lr,
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        backend=args.backend))
+    hist = loop.run(resume=not args.no_resume)
+    if not hist:
+        print("nothing to do (already at the requested step)")
+        return 0
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-3:]])
+    print(f"loss {first:.4f} -> {last:.4f} over {len(hist)} steps "
+          f"({loop.nan_skips} NaN-guard rollbacks)")
+    if args.assert_improves and (last >= first or loop.nan_skips > 0):
+        print("FAIL: loss did not decrease (or a NaN rollback fired)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -63,6 +63,7 @@ class TrainLoop:
         self._stop = False
         self.step = 0
         self.nan_skips = 0
+        self._last_committed = 0         # latest step THIS run checkpointed
         self.history: list[dict] = []
         self.checkpointer = ckpt.AsyncCheckpointer(loop_cfg.ckpt_dir,
                                                    keep=loop_cfg.keep)
@@ -95,6 +96,7 @@ class TrainLoop:
     def _save(self, params, opt_state, step: int) -> None:
         self.checkpointer.save_async({"params": params, "opt": opt_state},
                                      step, extra={"model": self.model_cfg.name})
+        self._last_committed = step
 
     def _heartbeat(self, step: int, metrics: dict) -> None:
         if self.loop_cfg.heartbeat_path is None:
@@ -119,6 +121,7 @@ class TrainLoop:
                       extra={"model": self.model_cfg.name})
         data = DataIterator(self.data_cfg, start_step=start)
         self.step = start
+        self._last_committed = start
         times: list[float] = []
 
         while self.step < self.loop_cfg.total_steps and not self._stop:
@@ -130,13 +133,20 @@ class TrainLoop:
             dt = time.time() - t0
 
             if not np.isfinite(loss):
-                # Roll back to the last committed checkpoint, skip batch.
+                # Roll back to THIS run's last committed checkpoint (a
+                # shared ckpt_dir may hold later steps from an abandoned
+                # run -- `latest_step` would silently resurrect them),
+                # then skip the poisoned batch.
                 self.nan_skips += 1
                 if self.nan_skips > self.loop_cfg.max_nan_skips:
                     raise RuntimeError("too many non-finite steps")
                 self.checkpointer.wait()
                 params, opt_state = self.init_state()
-                params, opt_state, good = self.try_restore(params, opt_state)
+                restored, _ = ckpt.restore(
+                    {"params": params, "opt": opt_state},
+                    self.loop_cfg.ckpt_dir, step=self._last_committed,
+                    shardings=self.param_shardings)
+                params, opt_state = restored["params"], restored["opt"]
                 data.skip_to(self.step + 1)   # drop the poisoned batch
                 self.step += 1
                 continue

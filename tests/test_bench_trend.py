@@ -1,0 +1,96 @@
+"""benchmarks/run.py --trend: the monotonic-slowdown detector that
+catches perf drift the per-commit --baseline gate (1.5x factor) never
+fires on, unit-tested on synthetic artifact histories."""
+
+from benchmarks.run import detect_trend
+
+
+def _artifact(**named_us):
+    return dict(rows=[dict(name=n, us_per_call=us, derived="")
+                      for n, us in named_us.items()])
+
+
+def _history(*per_run):
+    return [_artifact(**run) for run in per_run]
+
+
+def test_flat_history_clean():
+    hist = _history(*[dict(a=100.0, b=200.0, c=400.0)] * 5)
+    assert detect_trend(hist) == []
+
+
+def test_creeping_row_below_gate_threshold_flagged():
+    """+15% per run: every adjacent step is far below the gate's 1.5x,
+    but the cumulative 1.52x drift is exactly what --trend exists for."""
+    hist = _history(
+        dict(a=100.0, b=200.0, c=400.0),
+        dict(a=100.0, b=200.0, c=460.0),
+        dict(a=100.0, b=200.0, c=529.0),
+        dict(a=100.0, b=200.0, c=608.0),
+    )
+    flagged = detect_trend(hist)
+    assert [t["name"] for t in flagged] == ["c"]
+    assert flagged[0]["ratio"] > 1.5
+    assert flagged[0]["points"] == 4
+
+
+def test_uniform_machine_slowdown_not_flagged():
+    """Every run 2x slower than the last (a slower runner, not a
+    regression): the median normalization absorbs it entirely."""
+    hist = _history(
+        dict(a=100.0, b=200.0, c=400.0),
+        dict(a=200.0, b=400.0, c=800.0),
+        dict(a=400.0, b=800.0, c=1600.0),
+    )
+    assert detect_trend(hist) == []
+
+
+def test_creep_survives_machine_speed_noise():
+    """Machine speed swings run to run AND one row drifts on top: only
+    the drifting row is flagged."""
+    hist = _history(
+        dict(a=100.0, b=200.0, c=400.0),
+        dict(a=210.0, b=420.0, c=1008.0),     # 2.1x machine, c +20%
+        dict(a=90.0, b=180.0, c=518.0),       # 0.9x machine, c +20% more
+    )
+    flagged = detect_trend(hist)
+    assert [t["name"] for t in flagged] == ["c"]
+
+
+def test_non_monotonic_noise_not_flagged():
+    """A row that spikes and recovers is the gate's business (if it ever
+    exceeds the factor), not a trend."""
+    hist = _history(
+        dict(a=100.0, b=200.0, c=400.0),
+        dict(a=100.0, b=200.0, c=560.0),
+        dict(a=100.0, b=200.0, c=410.0),
+        dict(a=100.0, b=200.0, c=570.0),
+    )
+    assert detect_trend(hist) == []
+
+
+def test_small_total_drift_not_flagged():
+    """Monotone but tiny (+3% total): below min_total, stays quiet."""
+    hist = _history(
+        dict(a=100.0, b=200.0, c=400.0),
+        dict(a=100.0, b=200.0, c=406.0),
+        dict(a=100.0, b=200.0, c=412.0),
+    )
+    assert detect_trend(hist) == []
+
+
+def test_needs_min_points():
+    hist = _history(dict(a=100.0), dict(a=900.0))
+    assert detect_trend(hist) == []
+
+
+def test_untimed_and_missing_rows_ignored():
+    """plan/* rows (0.0 us) and rows absent from any artifact carry no
+    trend signal; rows present everywhere still gate."""
+    hist = _history(
+        dict(a=100.0, b=200.0, c=400.0, plan=0.0, old=50.0),
+        dict(a=130.0, b=200.0, c=400.0, plan=0.0),
+        dict(a=169.0, b=200.0, c=400.0, plan=0.0, new=70.0),
+    )
+    flagged = detect_trend(hist)
+    assert [t["name"] for t in flagged] == ["a"]

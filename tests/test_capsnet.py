@@ -143,6 +143,39 @@ def test_recon_gradient_flows_through_labeled_capsule():
         np.testing.assert_array_equal(others, np.zeros_like(others))
 
 
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_total_loss_recon_grad_only_through_labeled_capsule(backend):
+    """Through ``total_loss`` (not just ``decode``), the masked
+    reconstruction term backpropagates ONLY through the labeled capsule's
+    pose -- on BOTH backends, now that ``total_loss`` takes ``backend=``
+    and the Pallas path is differentiable.  Isolate the term by
+    differencing out the margin loss (margin depends only on lengths, so
+    its gradient w.r.t. the class capsules is mask-independent)."""
+    params = capsnet.init_params(KEY, SMOKE)
+    imgs = jax.random.uniform(KEY, (2, 14, 14, 1))
+    labels = jnp.array([3, 7])
+
+    def loss(params, recon_weight):
+        return capsnet.total_loss(params, imgs, labels, SMOKE,
+                                  recon_weight=recon_weight,
+                                  backend=backend)[0]
+
+    g_with = jax.grad(loss)(params, 1.0)
+    g_without = jax.grad(loss)(params, 0.0)
+    # recon-term gradient w.r.t. the ClassCaps weights, per capsule j:
+    # cc_w is [I, J, D, C], so axis 1 indexes the class capsule.
+    g_rec = np.asarray(g_with["cc_w"]) - np.asarray(g_without["cc_w"])
+    per_caps = np.abs(g_rec).max(axis=(0, 2, 3))
+    labeled = sorted(np.asarray(labels).tolist())
+    # unlabeled capsules sit at the fp32 differencing noise floor, three
+    # orders of magnitude below the labeled ones
+    nonzero = [j for j in range(SMOKE.num_classes)
+               if per_caps[j] > 1e-2 * per_caps.max()]
+    assert nonzero == labeled, (nonzero, per_caps)
+    # and the decoder itself only sees the labeled poses
+    assert np.abs(np.asarray(g_with["dec_w1"])).max() > 0.0
+
+
 def test_total_loss_reconstructs_labeled_capsule():
     params = capsnet.init_params(KEY, SMOKE)
     imgs = jax.random.uniform(KEY, (3, 14, 14, 1))

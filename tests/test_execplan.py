@@ -237,6 +237,50 @@ def test_evaluate_plan_gates_fused_phases():
 
 
 # ---------------------------------------------------------------------------
+# Training plans: backward OpPlans gated like the forward's
+# ---------------------------------------------------------------------------
+
+def test_train_plan_appends_backward_ops_in_reverse_order():
+    plan = compile_plan(CFG, batch=2, train=True)
+    assert plan.train
+    assert [op.name for op in plan.ops] == [
+        "Conv1", "PrimaryCaps", "ClassCaps-Routing",
+        "ClassCaps-Routing-bwd", "PrimaryCaps-bwd", "Conv1-bwd"]
+    assert [p.name for p in plan.profiles] == [
+        "Conv1", "PrimaryCaps", "ClassCaps-FC", "Sum+Squash", "Update+Sum",
+        "Update+Sum-bwd", "Sum+Squash-bwd", "ClassCaps-FC-bwd",
+        "PrimaryCaps-bwd", "Conv1-bwd"]
+    plan.validate()
+    for op in plan.ops:
+        assert op.vmem_bytes <= plan.vmem_budget
+        assert op.requirement.duration_cycles > 0
+    # conv backwards reuse the forward block tiles
+    for name in ("Conv1", "PrimaryCaps"):
+        assert plan.op(name + "-bwd").block == plan.op(name).block
+        assert plan.op(name + "-bwd").kernel == "conv_im2col_bwd"
+    bwd = plan.op("ClassCaps-Routing-bwd")
+    assert bwd.mode in ("resident", "streamed")
+    assert bwd.uhat_hbm_bytes == 0
+
+
+def test_train_plan_gates_backward_phases_in_dse_and_pmu():
+    plan = compile_plan(CFG, train=True)
+    mem = SRAMConfig("m", 1 << 20, power_gated=True, banks=16,
+                     sectors_per_bank=64)
+    sched = schedule_from_plan(mem, plan)
+    assert [ph.name for ph in sched.phases] == [op.name for op in plan.ops]
+    org = dse.design_organizations(list(plan.profiles))["PG-SEP"]
+    ev = dse.evaluate_plan(org, plan)
+    for s in ev.schedules:
+        assert len(s.phases) == 6            # 3 forward + 3 backward
+    assert "ClassCaps-Routing-bwd" in ev.per_op_mj
+    # the train=True default DSE sizes organizations for the full step
+    via_train = dse.best_design(train=True)
+    assert [ph.name for ph in
+            via_train.evaluation.schedules[0].phases][-1] == "Conv1-bwd"
+
+
+# ---------------------------------------------------------------------------
 # PMU edge cases
 # ---------------------------------------------------------------------------
 

@@ -211,6 +211,32 @@ def test_loop_preemption(tmp_path):
     assert loop.step in ckpt.committed_steps(tmp_path / "ck")  # final save
 
 
+def test_loop_nan_guard_ignores_stale_checkpoints(tmp_path):
+    """Non-finite loss rolls back to THIS run's last committed step, not
+    the directory's globally-latest: a stale later-step checkpoint from
+    an abandoned run (here with an incompatible tree, so restoring it
+    would raise a shape mismatch) must not be resurrected."""
+    ckpt.save({"bogus": np.zeros((2, 2))}, tmp_path / "ck", 40)
+    loop = _loop(tmp_path, total=6, ckpt_every=4)
+    inner = loop._step_fn
+    calls = {"n": 0}
+
+    def poisoned(params, opt, batch):
+        calls["n"] += 1
+        params, opt, metrics = inner(params, opt, batch)
+        if calls["n"] == 3:
+            metrics = dict(metrics)
+            metrics["loss"] = jnp.float32(np.nan)
+        return params, opt, metrics
+
+    loop._step_fn = poisoned
+    hist = loop.run(resume=False)
+    assert loop.nan_skips == 1
+    assert loop.step == 6
+    assert 3 not in [h["step"] for h in hist]   # poisoned batch skipped
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
 def test_loop_straggler_hook(tmp_path):
     seen = []
     loop = _loop(tmp_path, total=6)
