@@ -132,12 +132,21 @@ def detect_trend(histories: list[dict], *, min_points: int = 3,
     return flagged
 
 
+BASELINE_NAME = "BENCH_baseline.json"
+
+
 def _trend_paths(args_trend: list[str], window: int) -> list[pathlib.Path]:
     """Artifact paths, chronological: explicit files keep their order; a
-    single directory argument globs BENCH*.json sorted by mtime.  Only
-    the last ``window`` participate."""
+    single directory argument globs BENCH*.json sorted by mtime.  The
+    committed gate baseline (``BENCH_baseline.json``) is NOT a trend
+    point: a freshly refreshed baseline has the newest mtime and would
+    land as the "newest" run, corrupting the chronology (it still
+    participates when named explicitly).  Only the last ``window``
+    participate."""
     if len(args_trend) == 1 and pathlib.Path(args_trend[0]).is_dir():
-        paths = sorted(pathlib.Path(args_trend[0]).glob("BENCH*.json"),
+        paths = sorted((p for p in
+                        pathlib.Path(args_trend[0]).glob("BENCH*.json")
+                        if p.name != BASELINE_NAME),
                        key=lambda p: p.stat().st_mtime)
     else:
         paths = [pathlib.Path(p) for p in args_trend]

@@ -164,14 +164,20 @@ def _component_routing(org: MemoryOrg, op: OperationProfile,
 def _phase_requirements(org: MemoryOrg, sram_name: str,
                         profiles: Sequence[OperationProfile],
                         phase_groups: Sequence[tuple[str, Sequence[str]]]
-                        | None = None) -> list[PhaseRequirement]:
+                        | None = None,
+                        phase_durations: dict[str, float] | None = None
+                        ) -> list[PhaseRequirement]:
     """Per-phase byte demand on one SRAM (drives the PMU schedule).
 
     ``phase_groups`` -- ``(phase_name, covered profile names)`` pairs from
     an ``ExecutionPlan`` -- merges the dataflow operations a fused kernel
     executes as ONE phase into one gating phase (peak demand over the
     members, summed duration), so the schedule scores what actually runs.
-    Without groups every profile is its own phase (the paper's model).
+    ``phase_durations`` overrides a phase's duration with the plan's own
+    cycle estimate (a STREAMED fused phase re-streams W ``iters + 1``
+    times, so its leakage window is longer than the one-pass profile sum
+    the members alone imply).  Without groups every profile is its own
+    phase (the paper's model).
     """
     kind = org.name.removeprefix("PG-")
     per_op: dict[str, tuple[float, float]] = {}
@@ -192,20 +198,25 @@ def _phase_requirements(org: MemoryOrg, sram_name: str,
         phase_groups = tuple((op.name, (op.name,)) for op in profiles)
     reqs = []
     for phase_name, members in phase_groups:
+        duration = (phase_durations or {}).get(
+            phase_name, sum(per_op[m][1] for m in members))
         reqs.append(PhaseRequirement(
             name=phase_name,
             required_bytes=max(per_op[m][0] for m in members),
-            duration_cycles=sum(per_op[m][1] for m in members)))
+            duration_cycles=duration))
     return reqs
 
 
 def evaluate(org: MemoryOrg, profiles: Sequence[OperationProfile], *,
-             phase_groups: Sequence[tuple[str, Sequence[str]]] | None = None
+             phase_groups: Sequence[tuple[str, Sequence[str]]] | None = None,
+             phase_durations: dict[str, float] | None = None
              ) -> OrgEvaluation:
     """Score ``org``: dynamic energy from the per-operation access counts,
     static/wakeup from the PMU gating schedule.  ``phase_groups`` (see
     ``_phase_requirements``) gates over fused executed phases instead of
-    one phase per dataflow operation."""
+    one phase per dataflow operation; ``phase_durations`` carries the
+    plan's per-phase cycle estimates (pass-count-aware for streamed
+    fused schedules)."""
     dyn = {s.name: 0.0 for s in org.srams}
     per_op = {op.name: 0.0 for op in profiles}
 
@@ -230,7 +241,8 @@ def evaluate(org: MemoryOrg, profiles: Sequence[OperationProfile], *,
     per_sram = []
     for s in org.srams:
         sched = build_schedule(s, _phase_requirements(org, s.name, profiles,
-                                                      phase_groups))
+                                                      phase_groups,
+                                                      phase_durations))
         schedules.append(sched)
         per_sram.append(SramEnergy(
             name=s.name, dynamic_mj=dyn[s.name],
@@ -349,6 +361,7 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
     network order, one per executed backward kernel.
     """
     phase_groups = None
+    phase_durations = None
     if profiles is None:
         if plan is None:
             from repro.core import execplan
@@ -356,6 +369,7 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
             plan = execplan.compile_plan(CapsNetConfig(), train=train)
         profiles = plan.profiles
         phase_groups = plan.phase_groups()
+        phase_durations = plan.phase_durations()
     elif plan is not None:
         raise ValueError("pass either profiles or plan, not both")
     profiles = list(profiles)
@@ -372,7 +386,8 @@ def explore(profiles: Sequence[OperationProfile] | None = None,
             if key in seen:
                 continue
             seen.add(key)
-            ev = evaluate(org, profiles, phase_groups=phase_groups)
+            ev = evaluate(org, profiles, phase_groups=phase_groups,
+                          phase_durations=phase_durations)
             results.append(DSEResult(org_name=name, sectors=sectors if pg else 1,
                                      total_mj=ev.total_mj, area_mm2=ev.area_mm2,
                                      evaluation=ev))
@@ -388,5 +403,7 @@ def best_design(profiles: Sequence[OperationProfile] | None = None,
 def evaluate_plan(org: MemoryOrg, plan) -> OrgEvaluation:
     """Score ``org`` against the schedule of an ``ExecutionPlan``: the
     dataflow access counts with the gating schedule built over the plan's
-    fused executed phases (``plan.phase_groups()``)."""
-    return evaluate(org, plan.profiles, phase_groups=plan.phase_groups())
+    fused executed phases (``plan.phase_groups()``) and the plan's
+    pass-count-aware phase durations."""
+    return evaluate(org, plan.profiles, phase_groups=plan.phase_groups(),
+                    phase_durations=plan.phase_durations())

@@ -137,6 +137,14 @@ class ExecutionPlan:
         return tuple((op.name, tuple(p.name for p in op.profiles))
                      for op in self.ops)
 
+    def phase_durations(self) -> dict[str, float]:
+        """Per-phase cycle estimate keyed by executed-op name.  Pass-count
+        aware: a STREAMED fused phase re-streams W (``iters + 1`` forward
+        / ``iters + 4`` backward passes recomputing the votes), so its
+        leakage window is longer than the one-pass profile sum a
+        ``phase_groups()`` consumer would otherwise derive."""
+        return {op.name: op.requirement.duration_cycles for op in self.ops}
+
     @property
     def peak_vmem_bytes(self) -> int:
         return max(op.vmem_bytes for op in self.ops)
@@ -256,7 +264,7 @@ class VotesRoutingSchedule:
     mode: str                # "resident" | "streamed"
     block_i: int
     vmem_bytes: int          # footprint of the CHOSEN schedule
-    n_passes: int            # W streams: 1 resident, 2*iters+1 streamed
+    n_passes: int            # W streams: 1 resident, iters+1 streamed
     workload: MatmulWorkload
 
 
@@ -303,9 +311,13 @@ def plan_votes_routing(num_caps: int, caps_dim: int, jd: int, j: int, *,
     iterates on-chip -- the split path's behavior minus the u_hat HBM
     round-trip); fall back to **streamed** (votes recomputed from
     re-streamed W tiles each pass) when the votes tensor cannot fit the
-    budget at any i-tile.  Raises ``PlanError`` only when even streamed
-    ``block_i=1`` exceeds the budget -- the point where no schedule can
-    keep the routing state on-chip at this batch.
+    budget at any i-tile.  The streamed schedule fuses each iteration's
+    s-accumulation with its logits update into ONE W stream (the b-update
+    runs against the previous pass's ``v`` held in scratch), so ``W``
+    moves ``iters + 1`` times per forward -- half the old separate
+    s-pass/b-pass schedule's ``2*iters + 1``.  Raises ``PlanError`` only
+    when even streamed ``block_i=1`` exceeds the budget -- the point
+    where no schedule can keep the routing state on-chip at this batch.
     """
     wl = MatmulWorkload(m=num_caps, k=caps_dim, n=jd, in_bytes=ELEM_BYTES)
     # Tile-shape pick only (our per-mode footprint model is what is held
@@ -332,7 +344,7 @@ def plan_votes_routing(num_caps: int, caps_dim: int, jd: int, j: int, *,
             f"streamed block_i=1 needs {need} B of VMEM, over the "
             f"{vmem_budget} B budget")
     return VotesRoutingSchedule(mode="streamed", block_i=bi, vmem_bytes=need,
-                                n_passes=2 * iters + 1, workload=wl)
+                                n_passes=iters + 1, workload=wl)
 
 
 def votes_routing_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
@@ -429,10 +441,12 @@ def plan_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int, j: int, *,
     ``validate()``.
 
     ``n_passes`` counts W streams: 2 resident (votes rebuild + du/dW
-    emit), ``2*iters + 4`` streamed (forward replay ``2T+1``, db seed,
-    ONE dv/ds reverse pass, emit -- the stop-gradient convention means
-    ``d u_hat`` only ever needs ``ds_T`` and ``ds_{T-1}``, so there is
-    no deep reverse recurrence to stream W for).
+    emit), ``iters + 4`` streamed (fused forward replay ``T+1`` -- one W
+    stream per replayed iteration, the logits update folded into the
+    s-pass like the forward kernel -- then db seed, ONE dv/ds reverse
+    pass, emit; the stop-gradient convention means ``d u_hat`` only ever
+    needs ``ds_T`` and ``ds_{T-1}``, so there is no deep reverse
+    recurrence to stream W for).
     """
     wl = MatmulWorkload(m=num_caps, k=caps_dim, n=jd, in_bytes=ELEM_BYTES)
     bi0 = max(min(plan_matmul(wl).block_m, num_caps), 1)
@@ -461,7 +475,7 @@ def plan_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int, j: int, *,
             f"batch is "
             f"{_fused_bwd_max_batch(num_caps, caps_dim, jd, j, iters, vmem_budget)}")
     return VotesRoutingSchedule(mode="streamed", block_i=bi, vmem_bytes=need,
-                                n_passes=2 * iters + 4, workload=wl)
+                                n_passes=iters + 4, workload=wl)
 
 
 def votes_routing_bwd_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
@@ -470,7 +484,7 @@ def votes_routing_bwd_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
     per pass, u read per pass (resident) or once (streamed: constant index
     map), the output cotangent read once, du/dW written once -- and NO
     ``u_hat`` or ``d u_hat`` term (neither ever exists off-chip)."""
-    w_passes = 2 if mode == "resident" else 2 * iters + 4
+    w_passes = 2 if mode == "resident" else iters + 4
     u_passes = 2 if mode == "resident" else 1
     u = batch * num_caps * caps_dim * u_passes
     w = num_caps * jd * caps_dim * w_passes
@@ -514,10 +528,14 @@ def _fused_requirement(dims: CapsNetDims,
     routing, so the phase demand is the peak of the three covered
     dataflow operations.  Streamed never materializes the votes: the
     demand is u + logits/couplings + the W prefetch buffer + the s/v
-    candidates (dataflow-model byte widths).
+    candidates (dataflow-model byte widths).  The streamed duration
+    scales the votes computation by the schedule's W-pass count
+    (``iters + 1`` fused passes recompute the votes each stream); the
+    resident duration is the plain three-operation sum (one pass).
     """
     cc, ss, us = profs
-    duration = cc.total_cycles + ss.total_cycles + us.total_cycles
+    duration = (cc.total_cycles * sched.n_passes
+                + ss.total_cycles + us.total_cycles)
     if sched.mode == "resident":
         req = max(cc.total_mem, ss.total_mem, us.total_mem)
     else:
@@ -554,8 +572,12 @@ def _fused_bwd_requirement(dims: CapsNetDims,
                            sched: VotesRoutingSchedule) -> PhaseRequirement:
     """ONE PMU phase for the fused backward, honest per mode (mirrors
     ``_fused_requirement``: resident holds votes-sized state across the
-    replay, streamed holds u + the logits trajectory + small temps)."""
-    duration = sum(p.total_cycles for p in profs_bwd)
+    replay, streamed holds u + the logits trajectory + small temps).  The
+    votes-recompute cycles (the ClassCaps-FC-bwd profile, whose 2x-forward
+    work matches resident's 2 W streams) scale with the schedule's W-pass
+    count: ``iters + 4`` streamed passes each rebuild one votes block."""
+    duration = (sum(p.total_cycles for p in profs_bwd[:-1])
+                + profs_bwd[-1].total_cycles * sched.n_passes / 2)
     if sched.mode == "resident":
         req = max(p.total_mem for p in profs_bwd)
     else:

@@ -11,6 +11,7 @@ re-run the block-shape DSE per invocation.  The oracles live in
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 
@@ -112,6 +113,14 @@ def planned_votes_routing(num_caps: int, caps_dim: int, jd: int,
     return sched.mode, sched.block_i
 
 
+@functools.lru_cache(maxsize=64)            # bounded like the plan caches
+def _warn_bwd_fallback_once(msg: str) -> None:
+    """Warn once per distinct infeasible-backward schedule (the message
+    embeds shapes, budget, and the fallback schedule, so it IS the key);
+    repeat calls hit the cache and stay silent."""
+    warnings.warn(msg, RuntimeWarning, stacklevel=4)
+
+
 @functools.lru_cache(maxsize=64)
 def planned_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int,
                               num_classes: int, iters: int, batch: int,
@@ -175,10 +184,19 @@ def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
                 pbmode, pbbi = planned_votes_routing_bwd(
                     u.shape[1], u.shape[2], w.shape[1], num_classes, iters,
                     u.shape[0], budget)
-            except execplan.PlanError:
+            except execplan.PlanError as err:
                 # Forward-only callers must not fail on backward planning;
                 # a caller who then differentiates anyway gets the forward
-                # schedule (numerically correct, footprint model exceeded).
+                # schedule (numerically correct, footprint model exceeded)
+                # -- warned ONCE per schedule so the silent-footprint case
+                # is at least visible.
+                _warn_bwd_fallback_once(
+                    f"votes_routing: no feasible backward schedule "
+                    f"under the {budget} B VMEM budget ({err}); the "
+                    f"forward runs fine, but differentiating this call "
+                    f"will reuse the forward schedule "
+                    f"(mode={mode!r}, block_i={block_i}) with a "
+                    f"backward VMEM footprint the plan never validated")
                 pbmode, pbbi = mode, block_i
             bwd_mode = bwd_mode or pbmode
             bwd_block_i = bwd_block_i or pbbi

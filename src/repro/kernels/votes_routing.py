@@ -22,13 +22,20 @@ per-configuration scratchpad decision:
             ``W`` and ``u`` are read exactly once.  Requires the full
             votes tensor to fit VMEM.
 
-  streamed  grid ``(2*iters + 1, num_i_blocks)``.  Only ``u`` (constant
+  streamed  grid ``(iters + 1, num_i_blocks)``.  Only ``u`` (constant
             index map: fetched once) and the routing state stay resident;
             votes are recomputed from streamed ``W`` tiles on every pass.
-            Even-numbered passes accumulate ``s`` (and squash into ``v``
-            at the last i-block); odd passes update the logits ``b``.
-            ``W`` is re-read ``2*iters + 1`` times -- the price of making
-            num_primary >> VMEM configurations feasible at all.
+            Pass ``t`` runs one WHOLE routing iteration per ``W`` stream:
+            while accumulating ``s_t`` from the recomputed votes block it
+            first folds in the logits update ``b_t = b_{t-1} + <u_hat,
+            v_{t-1}>`` for the same rows, against the previous pass's
+            ``v_{t-1}`` held in VMEM scratch -- a one-iteration software
+            pipeline that halves the old separate-s-pass/b-pass traffic.
+            ``W`` is re-read ``iters + 1`` times -- the price of making
+            num_primary >> VMEM configurations feasible at all.  The
+            unfused two-pass schedule survives as ``mode="streamed-2pass"``
+            (never plan-chosen): the oracle the fused pass is
+            property-tested against.
 
 Both schedules zero-pad the capsule axis up to a multiple of ``block_i``
 (the ``conv_im2col`` K-axis idiom): a clamped ragged tail block would
@@ -51,19 +58,23 @@ but the last iteration's are u_hat-constant under ``jax.grad``):
             ``d u_hat`` i-block against the streamed ``W``/``u`` tiles
             into ``du`` / ``dW`` block outputs.
 
-  streamed  grid ``(2*iters + 4, num_i_blocks)``.  Passes ``0..2T``
-            replay the forward with a ROLLING pair of logits slabs (the
-            stop-gradient convention means only ``b_{T-1}`` / ``b_T``
-            are ever consumed again, so slot ``t % 2`` suffices); pass
-            ``2T+1`` seeds ``db_T`` from the output cotangent; pass
-            ``2T+2`` accumulates ``dv_{T-1} = sum_i u_hat . db_T`` and
-            squash-vjps it into ``ds_{T-1}``; the final pass emits
-            ``du``/``dW`` per i-block from ``d u_hat = c_T (x) ds_T +
-            c_{T-1} (x) ds_{T-1}`` without ever materializing it beyond
-            one i-block.  There is NO deep reverse recurrence: with the
-            logits updates u_hat-constant, ``db_t`` for ``t < T`` feeds
-            nothing -- the backward is exactly one seed + one reverse
-            pass, regardless of the iteration count.
+  streamed  grid ``(iters + 4, num_i_blocks)``.  Passes ``0..T`` replay
+            the forward with the SAME fused s+b pass as the forward
+            kernel (one W stream per replayed iteration) over a ROLLING
+            pair of logits slabs (the stop-gradient convention means only
+            ``b_{T-1}`` / ``b_T`` are ever consumed again, so slot
+            ``t % 2`` suffices); pass ``T+1`` seeds ``db_T`` from the
+            output cotangent; pass ``T+2`` accumulates ``dv_{T-1} =
+            sum_i u_hat . db_T`` and squash-vjps it into ``ds_{T-1}``;
+            the final pass emits ``du``/``dW`` per i-block from
+            ``d u_hat = c_T (x) ds_T + c_{T-1} (x) ds_{T-1}`` without
+            ever materializing it beyond one i-block.  There is NO deep
+            reverse recurrence: with the logits updates u_hat-constant,
+            ``db_t`` for ``t < T`` feeds nothing -- the backward is
+            exactly one seed + one reverse pass, regardless of the
+            iteration count.  The unfused replay survives as
+            ``bwd_mode="streamed-2pass"`` (grid ``(2*iters + 4, ...)``),
+            the oracle for the fused replay's gradients.
 """
 
 from __future__ import annotations
@@ -78,7 +89,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.capsnet import squash
 
-MODES = ("resident", "streamed")
+MODES = ("resident", "streamed")        # plan-chooseable schedules
+ORACLE_MODE = "streamed-2pass"          # unfused streamed oracle (tests)
+ALL_MODES = MODES + (ORACLE_MODE,)
 
 
 def _votes_block(u, w):
@@ -120,6 +133,55 @@ def _resident_kernel(u_ref, w_ref, o_ref, votes_scr, *, iters: int, j: int,
 def _streamed_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *, iters: int,
                      j: int, d: int, n_blocks: int, block_i: int,
                      n_passes: int):
+    """Fused s+b pass: iteration ``t`` streams ``W`` exactly once.
+
+    Before accumulating ``s_t`` from the recomputed votes block, the same
+    block first applies the logits update ``b_t[rows] = b_{t-1}[rows] +
+    <u_hat, v_{t-1}>`` against the previous pass's ``v`` in scratch -- a
+    one-iteration software pipeline (pass 0 starts from the zero logits,
+    so its update is skipped).  ``n_passes = iters + 1``: the last pass
+    is the final readout.
+    """
+    del iters  # folded into n_passes = iters + 1
+    t = pl.program_id(0)
+    ib = pl.program_id(1)
+    rows = pl.ds(ib * block_i, block_i)
+    bsz = u_ref.shape[0]
+    uh4 = _votes_block(u_ref[:, rows, :],
+                       w_ref[...]).reshape(bsz, block_i, j, d)
+
+    @pl.when((t == 0) & (ib == 0))
+    def _():
+        b_scr[...] = jnp.zeros_like(b_scr)
+
+    @pl.when(t > 0)
+    def _():  # fold iteration t's logits update into the same W stream
+        v = v_scr[...].reshape(bsz, j, d)
+        b_scr[:, rows, :] += jnp.einsum("bijd,bjd->bij", uh4, v)
+
+    @pl.when(ib == 0)
+    def _():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    c = jax.nn.softmax(b_scr[:, rows, :], axis=2)
+    s_scr[...] += jnp.einsum("bij,bijd->bjd", c, uh4).reshape(bsz, j * d)
+
+    @pl.when(ib == n_blocks - 1)
+    def _():
+        v_scr[...] = squash(s_scr[...].reshape(bsz, j, d)).reshape(bsz, j * d)
+
+        @pl.when(t == n_passes - 1)
+        def _():
+            o_ref[...] = v_scr[...].astype(o_ref.dtype)
+
+
+def _streamed_2pass_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *,
+                           iters: int, j: int, d: int, n_blocks: int,
+                           block_i: int, n_passes: int):
+    """Unfused streamed schedule (``mode="streamed-2pass"``): one s-pass
+    plus one b-pass per iteration, ``W`` re-read ``2*iters + 1`` times.
+    Never plan-chosen -- kept as the oracle the fused pass is tested
+    against."""
     del iters  # folded into n_passes = 2*iters + 1
     p = pl.program_id(0)
     ib = pl.program_id(1)
@@ -222,6 +284,69 @@ def _resident_bwd_kernel(u_ref, w_ref, g_ref, du_ref, dw_ref, votes_scr, *,
         ).astype(dw_ref.dtype)
 
 
+def _streamed_bwd_tail(p, ib, first_pass, rows, uh4, u_blk, w_ref, g_ref,
+                       du_ref, dw_ref, b2_scr, s2_scr, db_scr, ds_last_scr,
+                       ds_prev_scr, acc_scr, *, slot_last: int,
+                       slot_prev: int, j: int, d: int, n_blocks: int,
+                       block_i: int):
+    """Seed / reverse / emit passes shared by BOTH streamed backward
+    replays (fused and the 2-pass oracle) -- only the index of the first
+    tail pass differs between them.  The three blocks are the
+    gradient-critical core of the streamed backward, so they exist once."""
+    bsz = u_blk.shape[0]
+
+    # ---- seed (first_pass): ds_T from the cotangent, db_T ----
+    @pl.when(p == first_pass)
+    def _():
+        @pl.when(ib == 0)
+        def _():
+            ds = _squash_bwd(
+                s2_scr[pl.ds(slot_last, 1)][0].reshape(bsz, j, d),
+                g_ref[...].astype(jnp.float32).reshape(bsz, j, d))
+            ds_last_scr[...] = ds.reshape(bsz, j * d)
+
+        ds = ds_last_scr[...].reshape(bsz, j, d)
+        dc = jnp.einsum("bijd,bjd->bij", uh4, ds)
+        c = jax.nn.softmax(b2_scr[pl.ds(slot_last, 1), :, rows, :][0],
+                           axis=2)
+        db_scr[:, rows, :] = _softmax_bwd(c, dc)
+
+    # ---- one reverse pass (+1): dv_{T-1} = sum_i u_hat . db_T ----
+    @pl.when(p == first_pass + 1)
+    def _():
+        @pl.when(ib == 0)
+        def _():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        acc_scr[...] += jnp.einsum("bijd,bij->bjd", uh4,
+                                   db_scr[:, rows, :]).reshape(bsz, j * d)
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            ds = _squash_bwd(s2_scr[pl.ds(slot_prev, 1)][0].reshape(bsz, j, d),
+                             acc_scr[...].reshape(bsz, j, d))
+            ds_prev_scr[...] = ds.reshape(bsz, j * d)
+
+    # ---- emit (+2): d u_hat one i-block at a time -> du, dW ----
+    @pl.when(p == first_pass + 2)
+    def _():
+        c_last = jax.nn.softmax(
+            b2_scr[pl.ds(slot_last, 1), :, rows, :][0], axis=2)
+        c_prev = jax.nn.softmax(
+            b2_scr[pl.ds(slot_prev, 1), :, rows, :][0], axis=2)
+        ds_last = ds_last_scr[...].reshape(bsz, j, d)
+        ds_prev = ds_prev_scr[...].reshape(bsz, j, d)
+        duh = (c_last[..., None] * ds_last[:, None]
+               + c_prev[..., None] * ds_prev[:, None]).reshape(
+                   bsz, block_i, j * d)
+        du_ref[...] = jnp.einsum(
+            "bin,inc->bic", duh, w_ref[...].astype(jnp.float32)
+        ).astype(du_ref.dtype)
+        dw_ref[...] = jnp.einsum(
+            "bin,bic->inc", duh, u_blk.astype(jnp.float32)
+        ).astype(dw_ref.dtype)
+
+
 def _streamed_bwd_kernel(u_ref, w_ref, g_ref, du_ref, dw_ref, b2_scr,
                          s2_scr, db_scr, ds_last_scr, ds_prev_scr, acc_scr,
                          v_scr, *, iters: int, j: int, d: int,
@@ -237,8 +362,67 @@ def _streamed_bwd_kernel(u_ref, w_ref, g_ref, du_ref, dw_ref, b2_scr,
 
     # Only b_{T-1}/b_T and s_{T-1}/s_T are ever consumed again (the
     # stop-gradient convention kills the deeper reverse chain), so the
-    # replay keeps a rolling PAIR of slabs indexed by t % 2: the b-pass
-    # at t overwrites slot (t+1) % 2 = b_{t-1}, which is already dead.
+    # replay keeps a rolling PAIR of slabs indexed by t % 2: pass t
+    # overwrites slot t % 2 = b_{t-2}, which is already dead.
+    slot_last = t_total % 2
+    slot_prev = (t_total - 1) % 2
+
+    # ---- fused forward replay (passes 0 .. T): one W stream per
+    # iteration, the logits update folded into the s-pass exactly like
+    # the forward kernel -- b_t = b_{t-1} + <u_hat, v_{t-1}> lands in
+    # slot t % 2 before the same rows feed iteration t's softmax ----
+    @pl.when((p == 0) & (ib == 0))
+    def _():
+        b2_scr[pl.ds(0, 1)] = jnp.zeros_like(b2_scr[pl.ds(0, 1)])
+
+    @pl.when((p >= 1) & (p <= t_total))
+    def _():  # iteration p's logits update rides this pass's W stream
+        b_prev = b2_scr[pl.ds((p - 1) % 2, 1), :, rows, :][0]
+        v = v_scr[...].reshape(bsz, j, d)
+        b2_scr[pl.ds(p % 2, 1), :, rows, :] = (
+            b_prev + jnp.einsum("bijd,bjd->bij", uh4, v))[None]
+
+    @pl.when(p <= t_total)
+    def _():  # s-pass of iteration p (p == T is the final readout)
+        @pl.when(ib == 0)
+        def _():
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        c = jax.nn.softmax(b2_scr[pl.ds(p % 2, 1), :, rows, :][0], axis=2)
+        acc_scr[...] += jnp.einsum("bij,bijd->bjd", c, uh4).reshape(bsz,
+                                                                    j * d)
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            s2_scr[pl.ds(p % 2, 1)] = acc_scr[...][None]
+            v_scr[...] = squash(
+                acc_scr[...].reshape(bsz, j, d)).reshape(bsz, j * d)
+
+    # ---- seed / reverse / emit (passes T+1 .. T+3) ----
+    _streamed_bwd_tail(p, ib, t_total + 1, rows, uh4, u_blk, w_ref, g_ref,
+                       du_ref, dw_ref, b2_scr, s2_scr, db_scr, ds_last_scr,
+                       ds_prev_scr, acc_scr, slot_last=slot_last,
+                       slot_prev=slot_prev, j=j, d=d, n_blocks=n_blocks,
+                       block_i=block_i)
+
+
+def _streamed_2pass_bwd_kernel(u_ref, w_ref, g_ref, du_ref, dw_ref, b2_scr,
+                               s2_scr, db_scr, ds_last_scr, ds_prev_scr,
+                               acc_scr, v_scr, *, iters: int, j: int, d: int,
+                               n_blocks: int, block_i: int):
+    """Unfused streamed backward (``bwd_mode="streamed-2pass"``): the
+    forward replay runs separate s- and b-passes (grid ``(2*iters + 4,
+    num_i_blocks)``).  Never plan-chosen -- the oracle the fused replay's
+    gradients are tested against."""
+    t_total = iters
+    p = pl.program_id(0)
+    ib = pl.program_id(1)
+    row0 = ib * block_i
+    rows = pl.ds(row0, block_i)
+    bsz = u_ref.shape[0]
+    u_blk = u_ref[:, rows, :]
+    uh4 = _votes_block(u_blk, w_ref[...]).reshape(bsz, block_i, j, d)
+
     slot_last = t_total % 2
     slot_prev = (t_total - 1) % 2
 
@@ -273,56 +457,12 @@ def _streamed_bwd_kernel(u_ref, w_ref, g_ref, du_ref, dw_ref, b2_scr,
         b2_scr[pl.ds((t_fwd + 1) % 2, 1), :, rows, :] = (
             b_blk + jnp.einsum("bijd,bjd->bij", uh4, v))[None]
 
-    # ---- seed (pass 2T+1): ds_T from the cotangent, db_T ----
-    @pl.when(p == 2 * t_total + 1)
-    def _():
-        @pl.when(ib == 0)
-        def _():
-            ds = _squash_bwd(
-                s2_scr[pl.ds(slot_last, 1)][0].reshape(bsz, j, d),
-                g_ref[...].astype(jnp.float32).reshape(bsz, j, d))
-            ds_last_scr[...] = ds.reshape(bsz, j * d)
-
-        ds = ds_last_scr[...].reshape(bsz, j, d)
-        dc = jnp.einsum("bijd,bjd->bij", uh4, ds)
-        c = jax.nn.softmax(b2_scr[pl.ds(slot_last, 1), :, rows, :][0],
-                           axis=2)
-        db_scr[:, rows, :] = _softmax_bwd(c, dc)
-
-    # ---- one reverse pass (2T+2): dv_{T-1} = sum_i u_hat . db_T ----
-    @pl.when(p == 2 * t_total + 2)
-    def _():
-        @pl.when(ib == 0)
-        def _():
-            acc_scr[...] = jnp.zeros_like(acc_scr)
-
-        acc_scr[...] += jnp.einsum("bijd,bij->bjd", uh4,
-                                   db_scr[:, rows, :]).reshape(bsz, j * d)
-
-        @pl.when(ib == n_blocks - 1)
-        def _():
-            ds = _squash_bwd(s2_scr[pl.ds(slot_prev, 1)][0].reshape(bsz, j, d),
-                             acc_scr[...].reshape(bsz, j, d))
-            ds_prev_scr[...] = ds.reshape(bsz, j * d)
-
-    # ---- emit (pass 2T+3): d u_hat one i-block at a time -> du, dW ----
-    @pl.when(p == 2 * t_total + 3)
-    def _():
-        c_last = jax.nn.softmax(
-            b2_scr[pl.ds(slot_last, 1), :, rows, :][0], axis=2)
-        c_prev = jax.nn.softmax(
-            b2_scr[pl.ds(slot_prev, 1), :, rows, :][0], axis=2)
-        ds_last = ds_last_scr[...].reshape(bsz, j, d)
-        ds_prev = ds_prev_scr[...].reshape(bsz, j, d)
-        duh = (c_last[..., None] * ds_last[:, None]
-               + c_prev[..., None] * ds_prev[:, None]).reshape(
-                   bsz, block_i, j * d)
-        du_ref[...] = jnp.einsum(
-            "bin,inc->bic", duh, w_ref[...].astype(jnp.float32)
-        ).astype(du_ref.dtype)
-        dw_ref[...] = jnp.einsum(
-            "bin,bic->inc", duh, u_blk.astype(jnp.float32)
-        ).astype(dw_ref.dtype)
+    # ---- seed / reverse / emit (passes 2T+1 .. 2T+3) ----
+    _streamed_bwd_tail(p, ib, 2 * t_total + 1, rows, uh4, u_blk, w_ref,
+                       g_ref, du_ref, dw_ref, b2_scr, s2_scr, db_scr,
+                       ds_last_scr, ds_prev_scr, acc_scr,
+                       slot_last=slot_last, slot_prev=slot_prev, j=j, d=d,
+                       n_blocks=n_blocks, block_i=block_i)
 
 
 # ---------------------------------------------------------------------------
@@ -376,8 +516,13 @@ def _vr_apply(st: _VRStatics, u, w):
             interpret=st.interpret,
         )(u, w)
 
-    n_passes = 2 * st.iters + 1
-    kernel = functools.partial(_streamed_kernel, iters=st.iters, j=j, d=d,
+    if st.mode == ORACLE_MODE:          # unfused oracle: s+b passes split
+        n_passes = 2 * st.iters + 1
+        body = _streamed_2pass_kernel
+    else:                               # fused: one W stream per iteration
+        n_passes = st.iters + 1
+        body = _streamed_kernel
+    kernel = functools.partial(body, iters=st.iters, j=j, d=d,
                                n_blocks=n_blocks, block_i=st.block_i,
                                n_passes=n_passes)
     return pl.pallas_call(
@@ -432,11 +577,15 @@ def _vr_grad(st: _VRStatics, u, w, g):
         )(u_p, w_p, g)
     else:
         t = st.iters
-        kernel = functools.partial(_streamed_bwd_kernel, iters=t, j=j, d=d,
+        if st.bwd_mode == ORACLE_MODE:  # unfused replay: 2T+1 fwd passes
+            body, n_passes = _streamed_2pass_bwd_kernel, 2 * t + 4
+        else:                           # fused replay: T+1 fwd passes
+            body, n_passes = _streamed_bwd_kernel, t + 4
+        kernel = functools.partial(body, iters=t, j=j, d=d,
                                    n_blocks=n_blocks, block_i=block_i)
         du, dw = pl.pallas_call(
             kernel,
-            grid=(2 * t + 4, n_blocks),
+            grid=(n_passes, n_blocks),
             in_specs=[
                 pl.BlockSpec((bsz, i_pad, c), lambda p, ib: (0, 0, 0)),
                 pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0)),
@@ -488,7 +637,10 @@ def votes_routing(u: jax.Array, w: jax.Array, *, iters: int = 3,
     ``mode``/``block_i`` come from the ExecutionPlan
     (``plan.op("ClassCaps-Routing")``); see ``repro.kernels.ops`` for the
     plan-aware wrapper.  The split ``caps_votes`` -> ``routing`` pair
-    remains available as the oracle/fallback path.
+    remains available as the oracle/fallback path, and
+    ``mode="streamed-2pass"`` / ``bwd_mode="streamed-2pass"`` run the
+    unfused streamed schedule (2*iters+1 / 2*iters+4 W passes) -- never
+    plan-chosen, kept as the oracle for the fused s+b pass.
 
     Differentiable: ``jax.grad`` runs the mode's backward Pallas kernel
     (``bwd_mode``/``bwd_block_i``, defaulting to the forward schedule --
@@ -501,13 +653,14 @@ def votes_routing(u: jax.Array, w: jax.Array, *, iters: int = 3,
     j = num_classes
     if jd % j:
         raise ValueError(f"votes dim {jd} not divisible by classes {j}")
-    if mode not in MODES:
-        raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
+    if mode not in ALL_MODES:
+        raise ValueError(f"unknown mode {mode!r}; choose from {ALL_MODES}")
     if iters < 1:
         raise ValueError(f"routing needs iters >= 1, got {iters}")
     bwd_mode = bwd_mode or mode
-    if bwd_mode not in MODES:
-        raise ValueError(f"unknown bwd_mode {bwd_mode!r}; choose from {MODES}")
+    if bwd_mode not in ALL_MODES:
+        raise ValueError(
+            f"unknown bwd_mode {bwd_mode!r}; choose from {ALL_MODES}")
     st = _VRStatics(iters=iters, num_classes=num_classes, mode=mode,
                     block_i=max(1, min(block_i, i_dim)),
                     bwd_mode=bwd_mode,

@@ -12,9 +12,21 @@ perturbs active requests.
 On the pallas backend the engine compiles the FUSED plan: the ClassCaps
 head is one ``votes_routing`` megakernel (resident or streamed schedule
 per the plan's VMEM decision), so no slot tick ever round-trips the votes
-tensor through HBM.  Classification is finished on device too -- the
-jitted forward returns ``(lengths, argmax)`` and only the active slots'
-rows are transferred to host each tick.
+tensor through HBM.  A caller-supplied plan must be compiled for
+``batch >= slots``: the jitted forward always runs all slot rows, so a
+smaller plan batch would blow the plan's validated VMEM footprint (or
+raise the opaque kernel-level batch error on the first tick) --
+``__init__`` rejects it up front, naming both numbers.
+
+Host<->device traffic is tick-size, not batch-size: the slot batch lives
+ON DEVICE and only slots dirtied since the last tick (new admissions,
+freed slots zeroing out) are uploaded (dirty set padded to the next
+power of two so the scatter compiles O(log slots) times, not once per
+occupancy); classification finishes on device and the active slots' rows
+are gathered INSIDE the jit through a fixed-size padded index, so the
+forward traces exactly once no matter how occupancy varies tick to tick
+(the old eager ``jnp.take`` compiled a fresh gather per distinct
+occupancy count).
 
 Per-request latency (submit -> classified) and engine throughput
 (requests/s) are reported by ``stats()``; tests validate slot-batched
@@ -33,7 +45,7 @@ import numpy as np
 
 from repro.core import capsnet
 from repro.core.capsnet import CapsNetConfig
-from repro.core.execplan import ExecutionPlan, compile_plan
+from repro.core.execplan import ExecutionPlan, PlanError, compile_plan
 
 
 @dataclasses.dataclass
@@ -64,6 +76,15 @@ class CapsuleEngine:
         self.slots = slots
         if plan is None and backend == "pallas":
             plan = compile_plan(cfg, batch=slots)
+        elif plan is not None and plan.batch < slots:
+            # The jitted forward runs ALL slot rows every tick; a plan
+            # compiled for fewer would either raise the kernel-level
+            # votes_routing batch error on the first step() or (jnp path)
+            # silently exceed the VMEM footprint the plan validated.
+            raise PlanError(
+                f"plan compiled for batch {plan.batch} cannot serve "
+                f"{slots} slots: every tick runs the full {slots}-row slot "
+                f"batch; compile the plan with batch >= slots")
         self.plan = plan          # None on the jnp path unless caller-supplied
         self.active: list[CapsRequest | None] = [None] * slots
         self.queue: deque[CapsRequest] = deque()
@@ -74,15 +95,22 @@ class CapsuleEngine:
         self._stopped_s: float | None = None
         self._batch = np.zeros(
             (slots, cfg.image_hw, cfg.image_hw, cfg.in_channels), np.float32)
+        self._batch_dev = jnp.asarray(self._batch)   # device-resident slots
+        self._dirty: set[int] = set()                # slots to re-upload
+        self._forward_traces = 0                     # (re)compilations seen
 
-        def fwd(p, images):
+        def fwd(p, images, idx):
+            self._forward_traces += 1                # counts traces, not calls
             out = capsnet.forward(p, images, cfg, backend=backend,
                                   plan=self.plan, interpret=interpret)
-            lengths = out["lengths"]
-            # Classify on device: only per-slot results cross to host.
+            # Gather the active slots ON DEVICE through the fixed-size
+            # padded index and classify there: one trace for any
+            # occupancy, and only slot-count-many result rows ever cross.
+            lengths = jnp.take(out["lengths"], idx, axis=0)
             return lengths, jnp.argmax(lengths, axis=-1)
 
         self._forward = jax.jit(fwd)
+        self._scatter = jax.jit(lambda b, i, x: b.at[i].set(x))
 
     # -- admission -------------------------------------------------------
     def submit(self, req: CapsRequest) -> None:
@@ -106,7 +134,22 @@ class CapsuleEngine:
             if self.active[s] is None and self.queue:
                 req = self.queue.popleft()
                 self._batch[s] = req.image        # shape-checked in submit()
+                self._dirty.add(s)
                 self.active[s] = req
+
+    def _upload_dirty(self) -> None:
+        """Scatter only the slots dirtied since the last tick into the
+        device-resident batch.  The dirty set is padded to the next power
+        of two by repeating its last entry (duplicate indices write the
+        same row), so the scatter compiles O(log slots) distinct shapes
+        instead of one per occupancy delta."""
+        dirty = sorted(self._dirty)
+        self._dirty.clear()
+        n = min(1 << (len(dirty) - 1).bit_length(), self.slots)
+        dirty.extend(dirty[-1:] * (n - len(dirty)))
+        idx = np.asarray(dirty, np.int32)
+        self._batch_dev = self._scatter(self._batch_dev, jnp.asarray(idx),
+                                        jnp.asarray(self._batch[idx]))
 
     # -- main loop -------------------------------------------------------
     def step(self) -> int:
@@ -118,13 +161,14 @@ class CapsuleEngine:
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
             return 0
-        lengths_dev, preds_dev = self._forward(self.params,
-                                               jnp.asarray(self._batch))
-        # Gather the active slots on device so only those rows cross to
-        # host, in one device_get (argmax already ran inside the jit).
-        idx = jnp.asarray(act)
-        lengths, preds = jax.device_get((jnp.take(lengths_dev, idx, axis=0),
-                                         jnp.take(preds_dev, idx, axis=0)))
+        if self._dirty:
+            self._upload_dirty()
+        # Fixed-size index: the active slots, padded by repeating the
+        # first (rows past len(act) are ignored positionally below).
+        idx = np.full(self.slots, act[0], np.int32)
+        idx[:len(act)] = act
+        lengths, preds = jax.device_get(
+            self._forward(self.params, self._batch_dev, jnp.asarray(idx)))
         now = time.perf_counter()
         for pos, s in enumerate(act):
             req = self.active[s]
@@ -134,6 +178,7 @@ class CapsuleEngine:
             self.finished.append(req)
             self.active[s] = None
             self._batch[s] = 0.0
+            self._dirty.add(s)          # freed slot returns to zero images
         for waiting in self.queue:
             waiting.queue_ticks += 1
         self.ticks += 1

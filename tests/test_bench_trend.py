@@ -2,7 +2,9 @@
 catches perf drift the per-commit --baseline gate (1.5x factor) never
 fires on, unit-tested on synthetic artifact histories."""
 
-from benchmarks.run import detect_trend
+import os
+
+from benchmarks.run import BASELINE_NAME, _trend_paths, detect_trend
 
 
 def _artifact(**named_us):
@@ -82,6 +84,25 @@ def test_small_total_drift_not_flagged():
 def test_needs_min_points():
     hist = _history(dict(a=100.0), dict(a=900.0))
     assert detect_trend(hist) == []
+
+
+def test_trend_paths_exclude_committed_baseline(tmp_path):
+    """A directory --trend argument must NOT pick up BENCH_baseline.json:
+    a freshly refreshed baseline has the newest mtime and would land as
+    the 'newest' trend point, corrupting the chronology."""
+    names = ["BENCH_run1.json", "BENCH_run2.json", BASELINE_NAME]
+    for k, name in enumerate(names):
+        p = tmp_path / name
+        p.write_text("{}")
+        os.utime(p, (1_000_000 + k, 1_000_000 + k))   # baseline newest
+    paths = _trend_paths([str(tmp_path)], window=5)
+    assert [p.name for p in paths] == ["BENCH_run1.json", "BENCH_run2.json"]
+    # naming the baseline explicitly still works (the user asked for it)
+    explicit = _trend_paths([str(tmp_path / BASELINE_NAME)], window=5)
+    assert [p.name for p in explicit] == [BASELINE_NAME]
+    # window still trims the oldest points after the exclusion
+    assert [p.name for p in _trend_paths([str(tmp_path)], window=1)] == [
+        "BENCH_run2.json"]
 
 
 def test_untimed_and_missing_rows_ignored():

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import capsnet
 from repro.core.capsnet import CapsNetConfig
-from repro.core.execplan import compile_plan
+from repro.core.execplan import PlanError, compile_plan
 from repro.serve import CapsRequest, CapsuleEngine
 
 KEY = jax.random.PRNGKey(0)
@@ -71,6 +71,55 @@ def test_engine_shares_one_plan():
     plan = compile_plan(CFG, batch=2)
     engine = CapsuleEngine(PARAMS, CFG, slots=2, plan=plan)
     assert engine.plan is plan                    # amortized, not recompiled
+
+
+def test_engine_rejects_plan_batch_below_slots():
+    """A plan compiled for batch < slots would blow the validated VMEM
+    footprint (or raise the opaque kernel batch error) on the first
+    step(); the constructor rejects it naming both numbers."""
+    plan = compile_plan(CFG, batch=2)
+    with pytest.raises(PlanError, match=r"batch 2.*4 slots"):
+        CapsuleEngine(PARAMS, CFG, slots=4, plan=plan)
+    # batch == slots and batch > slots are both within the validated bound
+    for slots in (2, 1):
+        engine = CapsuleEngine(PARAMS, CFG, slots=slots, plan=plan)
+        assert engine.plan is plan
+
+
+def test_engine_traces_forward_once_across_occupancies():
+    """Varying occupancy (full slots, partial refill, single straggler)
+    must reuse ONE compiled forward: the active-slot gather runs inside
+    the jit over a fixed-size padded index.  The old eager jnp.take
+    compiled a fresh gather program per distinct occupancy count."""
+    imgs = _images(7)
+    engine = CapsuleEngine(PARAMS, CFG, slots=3)
+    for i in range(7):
+        engine.submit(CapsRequest(rid=i, image=imgs[i]))
+    done = engine.run()                   # occupancies 3, 3, 1
+    assert len(done) == 7 and engine.ticks == 3
+    assert engine._forward_traces == 1
+    for r in done:                        # and results stay correct
+        want = np.asarray(capsnet.forward(
+            PARAMS, imgs[r.rid][None], CFG)["lengths"][0])
+        np.testing.assert_allclose(r.lengths, want, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_reuses_slot_with_fresh_image():
+    """The dirty-slot upload path must refresh a reused slot's device row
+    -- stale device state would silently classify the PREVIOUS image."""
+    imgs = _images(4)
+    engine = CapsuleEngine(PARAMS, CFG, slots=1)
+    for i in range(4):
+        engine.submit(CapsRequest(rid=i, image=imgs[i]))
+    done = engine.run()                   # slot 0 reused for every request
+    assert [r.rid for r in done] == list(range(4))
+    preds = set()
+    for r in done:
+        want = np.asarray(capsnet.forward(
+            PARAMS, imgs[r.rid][None], CFG)["lengths"][0])
+        np.testing.assert_allclose(r.lengths, want, rtol=1e-5, atol=1e-5)
+        preds.add(tuple(np.round(r.lengths, 6)))
+    assert len(preds) == 4                # four distinct images, not one
 
 
 def test_engine_pallas_backend_matches_jnp_engine():

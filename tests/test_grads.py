@@ -177,6 +177,30 @@ def test_votes_routing_grad_property(i, bi, bwd_mode):
         assert _rel(g, r) <= TOL
 
 
+@pytest.mark.parametrize("b,i,c,j,d,bi,iters", [
+    (1, 64, 8, 10, 16, 32, 3),       # divisible blocks
+    (2, 100, 8, 10, 16, 32, 3),      # ragged final i-block + batch>1
+    (2, 27, 4, 4, 8, 8, 1),          # odd non-power-of-two capsule count
+], ids=["even", "ragged", "nonpow2"])
+def test_streamed_fused_bwd_matches_2pass_oracle(b, i, c, j, d, bi, iters):
+    """The fused replay (iters+4 W passes) produces the SAME gradients as
+    the unfused 2-pass replay oracle (2*iters+4 passes) -- and both match
+    the jnp reference."""
+    u, w, k3 = _uv(b, i, c, j * d, seed=50 + i + iters)
+    dv = jax.random.normal(k3, (b, j, d))
+    fused, want = _vr_grad_pair(u, w, dv, iters=iters, j=j, d=d,
+                                mode="streamed", bwd_mode="streamed",
+                                bi=bi, bwd_bi=max(bi // 2, 1))
+    oracle, _ = _vr_grad_pair(u, w, dv, iters=iters, j=j, d=d,
+                              mode="streamed-2pass",
+                              bwd_mode="streamed-2pass",
+                              bi=bi, bwd_bi=max(bi // 2, 1))
+    for g_f, g_o, g_r in zip(fused, oracle, want):
+        np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_o),
+                                   rtol=1e-5, atol=1e-7)
+        assert _rel(g_f, g_r) <= TOL
+
+
 def test_grad_through_planless_wrapper():
     """Without a plan the wrapper resolves the backward schedule through
     the memoized backward plan decision and still matches the reference."""
@@ -287,6 +311,52 @@ def test_backward_plan_reports_zero_uhat_traffic():
     assert "Conv1-bwd" in groups and "PrimaryCaps-bwd" in groups
 
 
+def test_forward_only_backward_fallback_warns_once():
+    """A forward-only caller whose backward cannot plan gets a ONE-TIME
+    RuntimeWarning naming the exceeded budget (the old silent fallback
+    left a later jax.grad running an unvalidated footprint with no
+    trace), and the forward still executes and matches the reference."""
+    import warnings as _warnings
+    from repro.core import analysis
+    from repro.kernels.ops import _warn_bwd_fallback_once
+    dims = analysis.dims_from_config(NONPOW2)
+    jd = dims.num_classes * dims.class_dim
+    floor = execplan._fused_streamed_bwd_vmem(
+        2, dims.num_primary, 1, dims.primary_dim, jd, dims.num_classes,
+        dims.routing_iters)
+    plan = compile_plan(NONPOW2, batch=2, vmem_budget=floor - 1)
+    u, w, _ = _uv(2, dims.num_primary, dims.primary_dim, jd, seed=77)
+    _warn_bwd_fallback_once.cache_clear()
+    with pytest.warns(RuntimeWarning, match="no feasible backward") as rec:
+        got = ops.votes_routing(u, w, plan=plan)
+    assert f"{floor - 1} B" in str(rec[0].message)      # names the budget
+    assert FUSED_NAME + BWD_SUFFIX in str(rec[0].message)  # names the op
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")                 # second call: silent
+        ops.votes_routing(u, w, plan=plan)
+    want = capsnet.routing_by_agreement(
+        capsnet.compute_votes(u, w.reshape(dims.num_primary,
+                                           dims.num_classes, dims.class_dim,
+                                           dims.primary_dim)),
+        dims.routing_iters).reshape(2, jd)
+    assert _rel(got, want) <= 1e-4
+
+
+def test_backward_traffic_model_counts_fused_passes():
+    """votes_routing_bwd_hbm_bytes streams W iters+4 times in streamed
+    mode (the fused replay), not the old 2*iters+4."""
+    cfg = CapsNetConfig()
+    jd = cfg.num_classes * cfg.class_dim
+    stre = votes_routing_bwd_hbm_bytes(2, cfg.num_primary, cfg.primary_dim,
+                                       jd, mode="streamed", iters=3)
+    res = votes_routing_bwd_hbm_bytes(2, cfg.num_primary, cfg.primary_dim,
+                                      jd, mode="resident", iters=3)
+    w_sweep = cfg.num_primary * jd * cfg.primary_dim * execplan.ELEM_BYTES
+    u_bytes = 2 * cfg.num_primary * cfg.primary_dim * execplan.ELEM_BYTES
+    # streamed - resident = (iters+4-2) W sweeps minus one fewer u pass
+    assert stre - res == (3 + 4 - 2) * w_sweep - u_bytes
+
+
 def test_smallest_backward_infeasible_budget_raises_at_source():
     """The smallest budget that plans the forward but not the backward
     raises a PlanError naming the backward op and the largest feasible
@@ -318,7 +388,9 @@ def test_plan_votes_routing_bwd_prefers_resident_when_roomy():
     assert sched.mode == "resident" and sched.n_passes == 2
     tight = plan_votes_routing_bwd(600, 4, 80, 10, batch=2, iters=3,
                                    vmem_budget=400_000)
-    assert tight.mode == "streamed" and tight.n_passes == 2 * 3 + 4
+    # fused replay: one W stream per replayed iteration + readout, then
+    # seed / reverse / emit -- NOT the old 2-pass replay's 2*iters+4
+    assert tight.mode == "streamed" and tight.n_passes == 3 + 4
     assert tight.vmem_bytes <= 400_000
 
 

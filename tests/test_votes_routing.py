@@ -101,7 +101,9 @@ def test_small_budget_flips_plan_to_streamed():
     roomy = plan_votes_routing(600, 4, 80, 10, **args)
     assert roomy.mode == "resident" and roomy.n_passes == 1
     tight = plan_votes_routing(600, 4, 80, 10, vmem_budget=150_000, **args)
-    assert tight.mode == "streamed" and tight.n_passes == 2 * 3 + 1
+    # fused s+b pass: W streams once per iteration + the final readout,
+    # NOT the old 2-pass schedule's 2*iters+1
+    assert tight.mode == "streamed" and tight.n_passes == 3 + 1
     assert tight.vmem_bytes <= 150_000
     # the flip is forced: no resident i-tile fits this budget
     assert execplan._fused_resident_vmem(2, 600, 1, 4, 80, 10) > 150_000
@@ -160,6 +162,72 @@ def test_fused_modes_agree_on_same_network():
                              block_i=16)
     np.testing.assert_allclose(np.asarray(res), np.asarray(stre),
                                rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused s+b streamed pass vs the 2-pass oracle (mode="streamed-2pass")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,i,c,j,d,bi,iters", [
+    (1, 64, 8, 10, 16, 32, 3),       # divisible blocks
+    (2, 100, 8, 10, 16, 32, 3),      # ragged final i-block + batch>1
+    (3, 135, 8, 5, 8, 64, 2),        # batch > 1 + ragged tail
+    (2, 27, 4, 4, 8, 8, 1),          # odd non-power-of-two capsule count
+    (2, 96, 8, 5, 8, 32, 5),         # deeper iteration count
+])
+def test_fused_streamed_pass_matches_2pass_oracle(b, i, c, j, d, bi, iters):
+    """The one-iteration software pipeline (b-update folded into the
+    s-accumulation stream) is numerically identical to the unfused
+    schedule that streams W separately for each."""
+    u, w = _uv(b, i, c, j * d, seed=i + iters)
+    fused = ops.votes_routing(u, w, iters=iters, num_classes=j,
+                              mode="streamed", block_i=bi)
+    oracle = ops.votes_routing(u, w, iters=iters, num_classes=j,
+                               mode="streamed-2pass", block_i=bi)
+    want = ref.routing(ref.caps_votes(u, w).reshape(b, i, j, d),
+                       iters).reshape(b, j * d)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_oracle_mode_never_plan_chosen():
+    """The 2-pass schedule exists only as a test oracle: every plan mode
+    is resident or streamed, and validate() rejects the oracle name."""
+    from repro.kernels.votes_routing import ALL_MODES, MODES, ORACLE_MODE
+    assert ORACLE_MODE not in MODES and ORACLE_MODE in ALL_MODES
+    plan = compile_plan(NONPOW2, batch=2, vmem_budget=150_000)
+    assert plan.op(FUSED_NAME).mode in MODES
+    import dataclasses
+    bad = dataclasses.replace(
+        plan, ops=tuple(dataclasses.replace(op, mode=ORACLE_MODE)
+                        if op.name == FUSED_NAME else op
+                        for op in plan.ops))
+    with pytest.raises(PlanError, match="unknown mode"):
+        bad.validate()
+
+
+def test_streamed_w_traffic_halved_vs_2pass():
+    """Forward W traffic drops from 2*iters+1 to iters+1 passes; the
+    modeled per-forward savings is exactly iters W sweeps."""
+    iters = 3
+    tight = plan_votes_routing(600, 4, 80, 10, batch=2, iters=iters,
+                               vmem_budget=150_000)
+    fused_bytes = votes_routing_hbm_bytes(2, 600, 4, 80, tight.n_passes)
+    oracle_bytes = votes_routing_hbm_bytes(2, 600, 4, 80, 2 * iters + 1)
+    w_sweep = 600 * 80 * 4 * execplan.ELEM_BYTES
+    assert tight.n_passes == iters + 1
+    assert oracle_bytes - fused_bytes == iters * w_sweep
+    # the plan's streamed ClassCaps-Routing entry models the fused count
+    plan = compile_plan(NONPOW2, batch=2, vmem_budget=150_000)
+    fused_op = plan.op(FUSED_NAME)
+    assert fused_op.mode == "streamed"
+    assert fused_op.uhat_hbm_bytes == 0
+    jd = NONPOW2.num_classes * NONPOW2.class_dim
+    assert fused_op.hbm_bytes == votes_routing_hbm_bytes(
+        2, NONPOW2.num_primary, NONPOW2.primary_dim, jd,
+        NONPOW2.routing_iters + 1)
 
 
 # ---------------------------------------------------------------------------
