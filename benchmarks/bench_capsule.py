@@ -2,12 +2,15 @@
 
 Times the reference jnp forward against the ExecutionPlan-driven Pallas
 forward (interpret mode on CPU -- the comparison is about the shared plan,
-not raw speed off-TPU), times the im2col conv kernels and the fused
-votes+routing megakernel against the split ``caps_votes`` -> ``routing``
-pair (with the modeled HBM bytes each moves -- the u_hat round-trip the
-fusion kills), prints the compiled plan, and drives the slot-based
-``CapsuleEngine`` over a request stream reporting its full ``stats()``
-(the CI perf-trajectory rows in ``BENCH_capsule.json``).
+not raw speed off-TPU), the PIPELINED plan (Conv1 -> one
+``primary_routing`` megakernel) against the per-op plan with the modeled
+inter-layer HBM bytes the pipelining eliminates, times the im2col conv
+kernels and the fused votes+routing megakernel against the split
+``caps_votes`` -> ``routing`` pair (with the modeled HBM bytes each moves
+-- the u_hat round-trip the fusion kills), prints the compiled plan, and
+drives the slot-based ``CapsuleEngine`` over a request stream reporting
+its full ``stats()`` (the CI perf-trajectory rows in
+``BENCH_capsule.json``).
 """
 
 from __future__ import annotations
@@ -18,8 +21,9 @@ import numpy as np
 from benchmarks.common import row, timed
 from repro.core import capsnet, execplan
 from repro.core.capsnet import CapsNetConfig
-from repro.core.execplan import (BWD_SUFFIX, FUSED_NAME, compile_plan,
-                                 plan_votes_routing,
+from repro.core.execplan import (BWD_SUFFIX, FUSED_NAME, PIPE_NAME,
+                                 compile_plan, plan_votes_routing,
+                                 primary_intermediate_hbm_bytes,
                                  spilled_votes_routing_bwd_hbm_bytes,
                                  split_votes_routing_hbm_bytes,
                                  votes_routing_bwd_hbm_bytes,
@@ -54,6 +58,27 @@ def main() -> None:
     got, us = timed(lambda: np.asarray(f_pal(params, imgs)))
     row("capsnet-forward-pallas", us,
         f"maxdiff={np.abs(got - want).max():.2e}")
+
+    # PIPELINED plan: Conv1 -> ONE primary_routing megakernel (PrimaryCaps
+    # conv + squash + votes + routing, the inter-layer u resident in VMEM)
+    # vs the per-op plan above -- same forward, one fewer HBM round-trip.
+    pipe_plan = compile_plan(CFG, batch=BATCH, pipeline=True)
+    pipe_op = pipe_plan.op(PIPE_NAME)
+    f_pipe = jax.jit(lambda p, x: capsnet.forward(
+        p, x, CFG, backend="pallas", plan=pipe_plan)["lengths"])
+    piped, us = timed(lambda: np.asarray(f_pipe(params, imgs)))
+    row("capsnet-forward-pallas-pipelined", us,
+        f"mode={pipe_op.mode} block_i={pipe_op.block_i} "
+        f"block_k={pipe_op.block_k} maxdiff={np.abs(piped - got).max():.2e}")
+    inter = primary_intermediate_hbm_bytes(BATCH, CFG.num_primary,
+                                           CFG.primary_dim)
+    row("primary-routing/fwd-hbm-bytes-pipelined", 0.0,
+        f"{pipe_plan.forward_hbm_bytes():.0f}")
+    row("primary-routing/fwd-hbm-bytes-perop", 0.0,
+        f"{plan.forward_hbm_bytes():.0f}")
+    row("primary-routing/hbm-bytes-intermediate-saved", 0.0,
+        f"{inter:.0f} (u round-trip killed; pipelined "
+        f"intermediate_hbm_bytes={pipe_op.intermediate_hbm_bytes:.0f})")
 
     # Individual plan-driven conv kernels (the PR-2 im2col path).
     c1 = plan.op("Conv1")

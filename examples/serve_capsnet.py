@@ -36,7 +36,9 @@ def main() -> None:
                                 num_primary_groups=4, primary_dim=4,
                                 class_dim=8, use_decoder=False)
     params = capsnet.init_params(jax.random.PRNGKey(0), cfg)
-    plan = compile_plan(cfg, batch=args.slots)
+    # pipeline=True: PrimaryCaps -> ClassCaps served as ONE fused
+    # kernel when the pair fits VMEM (per-op plan otherwise).
+    plan = compile_plan(cfg, batch=args.slots, pipeline=True)
 
     print("== ExecutionPlan (one schedule: kernels + PMU + serving) ==")
     print(f"{'op':14s} {'kernel':18s} {'block':>18s} {'vmem KiB':>9s} "

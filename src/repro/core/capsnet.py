@@ -146,11 +146,16 @@ def forward(params: Params, images: jax.Array,
 
     ``backend="jnp"`` (default) is the pure-JAX reference.
     ``backend="pallas"`` runs the WHOLE network through the Pallas kernels
-    (conv_im2col Conv1 -> conv_im2col PrimaryCaps with fused squash ->
-    ONE fused votes_routing megakernel) with block shapes and the
-    resident/streamed routing schedule chosen by an ``ExecutionPlan``
-    (compiled on the fly from ``cfg`` unless ``plan`` is passed);
-    ``interpret=True`` validates on CPU, pass False on real TPU.
+    with block shapes and the resident/streamed routing schedule chosen
+    by an ``ExecutionPlan`` (compiled on the fly from ``cfg`` unless
+    ``plan`` is passed).  A pipelined plan (``compile_plan(...,
+    pipeline=True)``, the on-the-fly default) runs Conv1 -> ONE
+    ``primary_routing`` megakernel (PrimaryCaps conv + squash + votes +
+    routing, the inter-layer activation u resident in VMEM); a per-op
+    plan runs the three-call path (conv_im2col PrimaryCaps with fused
+    squash -> fused votes_routing megakernel) -- the pipelined plan's
+    fallback and parity oracle.  ``interpret=True`` validates on CPU,
+    pass False on real TPU.
 
     ``labels`` masks the reconstruction decoder with the true class
     (training semantics); when omitted the decoder masks with argmax.
@@ -162,22 +167,30 @@ def forward(params: Params, images: jax.Array,
         from repro.core import execplan as _execplan
         from repro.kernels import ops as _kops
         if plan is None:
-            plan = _execplan.compile_plan(cfg, batch=b)
+            plan = _execplan.compile_plan(cfg, batch=b, pipeline=True)
         x = _kops.conv2d(images, params["conv1_w"], params["conv1_b"],
                          stride=1, plan_op=plan.op("Conv1"),
                          epilogue="relu", interpret=interpret)
-        pc = plan.op("PrimaryCaps")
-        x = _kops.conv2d(x, params["pc_w"], params["pc_b"],
-                         stride=cfg.pc_stride, plan_op=pc,
-                         squash_dim=cfg.primary_dim, interpret=interpret)
-        u = x.reshape(b, cfg.num_primary, cfg.primary_dim)
-        if not pc.fuses_squash:
-            u = _kops.squash(u, plan=plan, interpret=interpret)
+        pipelined = any(op.name == _execplan.PIPE_NAME for op in plan.ops)
         w = params["cc_w"].reshape(
             cfg.num_primary, cfg.num_classes * cfg.class_dim, cfg.primary_dim)
-        # ONE fused megakernel: votes + all routing iterations on-chip
-        # (u_hat never round-trips through HBM).
-        v = _kops.votes_routing(u, w, plan=plan, interpret=interpret)
+        if pipelined:
+            # ONE pipelined megakernel: PrimaryCaps conv + squash + votes
+            # + routing, with the inter-layer u in VMEM scratch (neither
+            # u nor u_hat ever round-trips through HBM).
+            v = _kops.primary_routing(x, params["pc_w"], params["pc_b"], w,
+                                      plan=plan, interpret=interpret)
+        else:
+            pc = plan.op("PrimaryCaps")
+            x = _kops.conv2d(x, params["pc_w"], params["pc_b"],
+                             stride=cfg.pc_stride, plan_op=pc,
+                             squash_dim=cfg.primary_dim, interpret=interpret)
+            u = x.reshape(b, cfg.num_primary, cfg.primary_dim)
+            if not pc.fuses_squash:
+                u = _kops.squash(u, plan=plan, interpret=interpret)
+            # ONE fused megakernel: votes + all routing iterations on-chip
+            # (u_hat never round-trips through HBM).
+            v = _kops.votes_routing(u, w, plan=plan, interpret=interpret)
         v = v.reshape(b, cfg.num_classes, cfg.class_dim)
     else:
         x = jax.lax.conv_general_dilated(

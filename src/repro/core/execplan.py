@@ -42,6 +42,15 @@ SQUASH_BLOCK_ROWS = 1024
 FUSED_NAME = "ClassCaps-Routing"
 FUSED_COVERS = ("ClassCaps-FC", "Sum+Squash", "Update+Sum")
 
+# The pipelined producer->consumer pair: PrimaryCaps' squash-epilogue
+# output feeds the votes/routing megakernel straight from VMEM scratch,
+# so the inter-layer activation u never round-trips HBM (the paper's
+# inter-layer on-chip residency -- DESCNet's scratchpad, CapsAcc's
+# cross-layer reuse).  ONE plan op / PMU phase covering four dataflow
+# operations.
+PIPE_NAME = "PrimaryCaps-Routing"
+PIPE_COVERS = ("PrimaryCaps",) + FUSED_COVERS
+
 # Training plans append one backward OpPlan per executed kernel, named
 # "<op>-bwd" and listed in reverse network order (the order the backward
 # actually runs), so dse/pmu gate the backward phases like the forward's.
@@ -70,6 +79,10 @@ class OpPlan:
     ``streamed``); ``hbm_bytes`` is the op's modeled HBM traffic per
     forward at the plan batch and ``uhat_hbm_bytes`` the share of it spent
     on the votes intermediate (0 for the fused kernel -- the point).
+    ``intermediate_hbm_bytes`` is the traffic this op's OUTPUT pays to
+    reach its consumer: the write+read round-trip on a per-op plan, 0 on
+    a pipelined pair (the consumer reads the producer's VMEM scratch --
+    the inter-layer analogue of ``uhat_hbm_bytes``).
     """
 
     name: str
@@ -85,6 +98,8 @@ class OpPlan:
     mode: str | None = None
     hbm_bytes: float | None = None
     uhat_hbm_bytes: float | None = None
+    intermediate_hbm_bytes: float | None = None
+    block_k: int | None = None   # pipelined produce-phase K tile
 
     @property
     def profile(self) -> OperationProfile:
@@ -149,6 +164,17 @@ class ExecutionPlan:
     def peak_vmem_bytes(self) -> int:
         return max(op.vmem_bytes for op in self.ops)
 
+    def forward_hbm_bytes(self) -> float:
+        """Total modeled HBM traffic of one forward pass (forward ops'
+        ``hbm_bytes`` summed) -- the whole-network number the paper
+        optimizes.  Each op's ``intermediate_hbm_bytes`` is the share of
+        this total spent round-tripping that op's output to its consumer
+        (already inside the per-op ``hbm_bytes``: the producer's store and
+        the consumer's load), so a pipelined plan beats the per-op plan
+        here by at least the eliminated intermediate."""
+        return sum(op.hbm_bytes or 0.0 for op in self.ops
+                   if not op.name.endswith(BWD_SUFFIX))
+
     def validate(self) -> None:
         """Check the plan invariants; raises ``PlanError`` on violation."""
         if self.batch < 1:
@@ -199,6 +225,7 @@ class ExecutionPlan:
                 est_cycles=op.est_cycles,
                 hbm_bytes=op.hbm_bytes,
                 uhat_hbm_bytes=op.uhat_hbm_bytes,
+                intermediate_hbm_bytes=op.intermediate_hbm_bytes,
                 req_kib=op.requirement.required_bytes / 1024,
                 duration_cycles=op.requirement.duration_cycles,
             ))
@@ -368,6 +395,188 @@ def split_votes_routing_hbm_bytes(batch: int, num_caps: int, caps_dim: int,
     v = batch * jd
     uhat = 2 * batch * num_caps * jd                 # write + read back
     return float((u + w + v + uhat) * ELEM_BYTES), float(uhat * ELEM_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined PrimaryCaps->ClassCaps pair (inter-op residency DSE)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrimaryRoutingSchedule:
+    """Plan decision for the pipelined producer->consumer megakernel.
+
+    The producer output u ([B, I, C] -- the inter-layer activation) is
+    SMALL, so the whole tensor lives in VMEM scratch: a K-blocked produce
+    phase accumulates the im2col matmul into it and applies the
+    bias+squash epilogue in place, then the votes/routing phases read its
+    i-blocks exactly the way the fused megakernel reads u from HBM.
+    Patches and the conv weight are fetched ONCE (vs once per re-stream
+    on a per-i-block recompute), and u itself never exists off-chip.
+    """
+
+    mode: str                # votes/routing schedule: "resident"|"streamed"
+    block_i: int             # votes/routing i-tile
+    block_k: int             # produce-phase K tile (im2col reduction)
+    k_steps: int             # ceil(K / block_k) produce grid steps
+    vmem_bytes: int          # footprint of the CHOSEN schedule
+    n_passes: int            # ClassCaps W streams: 1 resident, iters+1 str.
+    workload: MatmulWorkload # the producer's im2col matmul
+    block: BlockPlan         # producer tiling (VJP replay matmuls)
+
+
+def _pipe_produce_vmem(batch: int, p_pos: int, n_ch: int, block_k: int,
+                       i_pad: int, caps_dim: int) -> int:
+    """Produce-phase residency shared by both pipelined schedules: the
+    full producer output scratch (pre-activation, squashed in place) plus
+    double-buffered patch / conv-weight K tiles and the bias row."""
+    u_scr = batch * i_pad * caps_dim
+    tiles = 2 * (batch * p_pos * block_k + block_k * n_ch)
+    return u_scr + tiles + n_ch
+
+
+def _pipe_resident_vmem(batch: int, p_pos: int, n_ch: int, block_k: int,
+                        num_caps: int, block_i: int, caps_dim: int,
+                        jd: int, j: int) -> int:
+    """Resident consumer on top of the produce-phase residency: the full
+    votes tensor + routing logits in scratch, double-buffered W i-tiles,
+    one [B, block_i, J*D] votes block per step."""
+    i_pad = _i_padded(num_caps, block_i)
+    votes = batch * i_pad * jd
+    logits = batch * i_pad * j
+    w_tile = 2 * block_i * jd * caps_dim
+    uh_block = batch * block_i * jd
+    out = batch * jd
+    return (_pipe_produce_vmem(batch, p_pos, n_ch, block_k, i_pad, caps_dim)
+            + votes + logits + w_tile + uh_block + out) * ELEM_BYTES
+
+
+def _pipe_streamed_vmem(batch: int, p_pos: int, n_ch: int, block_k: int,
+                        num_caps: int, block_i: int, caps_dim: int,
+                        jd: int, j: int) -> int:
+    """Streamed consumer on top of the produce-phase residency: logits +
+    s/v candidates resident, W tiles re-streamed each pass, one votes
+    block recomputed per step (u is the produce scratch itself -- the
+    streamed megakernel's constant-index u fetch becomes free)."""
+    i_pad = _i_padded(num_caps, block_i)
+    logits = batch * i_pad * j
+    w_tile = 2 * block_i * jd * caps_dim
+    uh_block = batch * block_i * jd
+    sv = 2 * batch * jd
+    out = batch * jd
+    return (_pipe_produce_vmem(batch, p_pos, n_ch, block_k, i_pad, caps_dim)
+            + logits + w_tile + uh_block + sv + out) * ELEM_BYTES
+
+
+def plan_primary_routing(p_pos: int, k_in: int, n_ch: int, num_caps: int,
+                         caps_dim: int, jd: int, j: int, *,
+                         batch: int = 1, iters: int = 3,
+                         vmem_budget: int = VMEM_BYTES
+                         ) -> PrimaryRoutingSchedule:
+    """Schedule DSE for the pipelined PrimaryCaps->ClassCaps pair.
+
+    Prefer the resident consumer (votes computed once into scratch);
+    fall back to streamed (votes recomputed from re-streamed W, the
+    fused s+b pass -- ``iters + 1`` W streams).  Both shrink the votes
+    i-tile first, then halve the produce K tile, before giving up.
+    Raises ``PlanError`` when even streamed ``block_i=1, block_k=1``
+    exceeds the budget -- ``compile_plan`` then falls back to the
+    per-op pair (which may itself still fit: its phases never coexist).
+    """
+    wl = MatmulWorkload(m=batch * p_pos, k=k_in, n=n_ch,
+                        in_bytes=ELEM_BYTES)
+    try:
+        blk = plan_matmul(wl, vmem_budget)
+    except ValueError as err:
+        raise PlanError(f"{PIPE_NAME}: no feasible producer tiling at "
+                        f"batch={batch}: {err}")
+    bk0 = max(min(blk.block_k, k_in), 1)
+    vr_wl = MatmulWorkload(m=num_caps, k=caps_dim, n=jd,
+                           in_bytes=ELEM_BYTES)
+    bi0 = max(min(plan_matmul(vr_wl).block_m, num_caps), 1)
+
+    def _fit(vmem_of):
+        bk = bk0
+        while True:
+            bi = bi0
+            while bi > 1 and vmem_of(bi, bk) > vmem_budget:
+                bi //= 2
+            need = vmem_of(bi, bk)
+            if need <= vmem_budget:
+                return bi, bk, need
+            if bk == 1:
+                return None
+            bk = max(bk // 2, 1)
+
+    fit = _fit(lambda bi, bk: _pipe_resident_vmem(
+        batch, p_pos, n_ch, bk, num_caps, bi, caps_dim, jd, j))
+    if fit is not None:
+        bi, bk, need = fit
+        return PrimaryRoutingSchedule(
+            mode="resident", block_i=bi, block_k=bk,
+            k_steps=math.ceil(k_in / bk), vmem_bytes=need, n_passes=1,
+            workload=wl, block=blk)
+    fit = _fit(lambda bi, bk: _pipe_streamed_vmem(
+        batch, p_pos, n_ch, bk, num_caps, bi, caps_dim, jd, j))
+    if fit is None:
+        need = _pipe_streamed_vmem(batch, p_pos, n_ch, 1, num_caps, 1,
+                                   caps_dim, jd, j)
+        raise PlanError(
+            f"{PIPE_NAME}: no feasible pipelined schedule at batch={batch}: "
+            f"even streamed block_i=1, block_k=1 needs {need} B of VMEM, "
+            f"over the {vmem_budget} B budget")
+    bi, bk, need = fit
+    return PrimaryRoutingSchedule(
+        mode="streamed", block_i=bi, block_k=bk,
+        k_steps=math.ceil(k_in / bk), vmem_bytes=need, n_passes=iters + 1,
+        workload=wl, block=blk)
+
+
+def primary_routing_hbm_bytes(batch: int, p_pos: int, k_in: int, n_ch: int,
+                              num_caps: int, caps_dim: int, jd: int,
+                              n_passes: int) -> float:
+    """Modeled HBM traffic of the pipelined pair per forward: patches and
+    the conv weight+bias each read ONCE (the produce phase streams K
+    tiles past the resident output scratch), the routing W streamed
+    ``n_passes`` times, v written once -- and NO u term at all (the
+    inter-layer activation never exists off-chip)."""
+    patches = batch * p_pos * k_in
+    wpc = k_in * n_ch + n_ch
+    w_cc = num_caps * jd * caps_dim * n_passes
+    v = batch * jd
+    return float((patches + wpc + w_cc + v) * ELEM_BYTES)
+
+
+def primary_intermediate_hbm_bytes(batch: int, num_caps: int,
+                                   caps_dim: int) -> float:
+    """The u round-trip a per-op plan pays between PrimaryCaps and the
+    votes/routing megakernel: written by the conv epilogue, read back by
+    the u-load -- the traffic the pipelined pair eliminates."""
+    return float(2 * batch * num_caps * caps_dim * ELEM_BYTES)
+
+
+def _pipe_requirement(dims: CapsNetDims,
+                      profs: Sequence[OperationProfile],
+                      sched: PrimaryRoutingSchedule) -> PhaseRequirement:
+    """ONE PMU phase for the pipelined pair, honest per mode: the produce
+    phase's demand is the PrimaryCaps profile's; the consumer phases match
+    ``_fused_requirement`` (with u's residency already counted -- it IS
+    the produce scratch).  Duration is the four covered operations' sum
+    with the votes computation scaled by the W-pass count."""
+    pc, cc, ss, us = profs
+    duration = (pc.total_cycles + cc.total_cycles * sched.n_passes
+                + ss.total_cycles + us.total_cycles)
+    if sched.mode == "resident":
+        req = max(p.total_mem for p in profs)
+    else:
+        bij = dims.num_primary * dims.num_classes
+        jd = dims.num_classes * dims.class_dim
+        req = max(pc.total_mem,
+                  cc.data_mem
+                  + bij * (analysis.ACC_BYTES + analysis.ACT_BYTES)
+                  + cc.weight_mem
+                  + 4 * jd * analysis.ACC_BYTES)
+    return PhaseRequirement(name=PIPE_NAME, required_bytes=req,
+                            duration_cycles=duration)
 
 
 # ---------------------------------------------------------------------------
@@ -596,7 +805,8 @@ def _fused_bwd_requirement(dims: CapsNetDims,
 def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
                  vmem_budget: int = VMEM_BYTES,
                  dataflow: str = "resident",
-                 train: bool = False) -> ExecutionPlan:
+                 train: bool = False,
+                 pipeline: bool = False) -> ExecutionPlan:
     """Compile ``cfg`` into the per-operation ExecutionPlan (memoized:
     plans are immutable and the block-shape DSE runs once per shape).
 
@@ -619,6 +829,15 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
     model -- one phase per EXECUTED op, so the fused megakernel is scored
     as the single phase it runs; ``vmem_bytes`` scale with ``batch``
     where the kernel batches.
+
+    ``pipeline=True`` additionally tries the producer->consumer PAIR:
+    PrimaryCaps and the megakernel collapse into ONE ``primary_routing``
+    OpPlan (combined VMEM footprint, combined PMU phase,
+    ``intermediate_hbm_bytes=0`` -- the inter-layer u never off-chip)
+    whenever the combined footprint fits the budget, silently keeping the
+    per-op pair otherwise.  The backward OpPlans are unchanged: the
+    pipelined VJP replays the producer from patches and runs exactly the
+    per-op backward kernels.
 
     ``train=True`` appends one backward OpPlan per executed kernel, in
     reverse network order (the order the backward runs): the fused
@@ -677,6 +896,12 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
                     vmem_bytes=max(op.vmem_bytes,
                                    2 * block_rows * dims.primary_dim
                                    * ELEM_BYTES))
+            # On a per-op plan this op's output u round-trips HBM to
+            # reach the votes/routing megakernel (share of the plan's
+            # forward_hbm_bytes; the pipelined pair reports 0 here).
+            op = dataclasses.replace(
+                op, intermediate_hbm_bytes=primary_intermediate_hbm_bytes(
+                    batch, dims.num_primary, dims.primary_dim))
         ops.append(op)
 
     # ClassCaps head: ONE fused votes+routing megakernel.  The resident
@@ -701,6 +926,41 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
         uhat_hbm_bytes=0.0,
         requirement=_fused_requirement(dims, fused_profs, sched),
         profiles=fused_profs))
+
+    # Pipelined producer->consumer pair: replace [PrimaryCaps, fused
+    # megakernel] with ONE OpPlan whose kernel streams the conv's
+    # squash-epilogue output straight from VMEM scratch into the
+    # votes/routing accumulation.  Falls back to the per-op pair above
+    # when the combined footprint exceeds the budget (PlanError only
+    # when neither fits -- the per-op planning already raised then).
+    conv1_op, pc_op = ops[0], ops[1]
+    pipe_sched = None
+    if pipeline:
+        try:
+            pipe_sched = plan_primary_routing(
+                dims.pc_out ** 2, dims.pc_k ** 2 * dims.pc_cin,
+                dims.pc_cout, dims.num_primary, dims.primary_dim, jd,
+                dims.num_classes, batch=batch, iters=dims.routing_iters,
+                vmem_budget=vmem_budget)
+        except PlanError:
+            pipe_sched = None            # per-op pair is the fallback
+    if pipe_sched is not None:
+        pipe_profs = (by_name["PrimaryCaps"],) + fused_profs
+        prod_cycles = pipe_sched.workload.flops / (2 * MXU * MXU)
+        ops = [conv1_op, OpPlan(
+            name=PIPE_NAME, kernel="primary_routing",
+            workload=pipe_sched.workload, block=pipe_sched.block,
+            block_i=pipe_sched.block_i, block_k=pipe_sched.block_k,
+            mode=pipe_sched.mode, vmem_bytes=pipe_sched.vmem_bytes,
+            est_cycles=(prod_cycles + votes_cycles * pipe_sched.n_passes
+                        + routing_cycles),
+            hbm_bytes=primary_routing_hbm_bytes(
+                batch, dims.pc_out ** 2, dims.pc_k ** 2 * dims.pc_cin,
+                dims.pc_cout, dims.num_primary, dims.primary_dim, jd,
+                pipe_sched.n_passes),
+            uhat_hbm_bytes=0.0, intermediate_hbm_bytes=0.0,
+            requirement=_pipe_requirement(dims, pipe_profs, pipe_sched),
+            profiles=pipe_profs)]
 
     if train:
         # Backward OpPlans, reverse network order.  The fused backward
@@ -727,9 +987,14 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
             uhat_hbm_bytes=0.0,
             requirement=_fused_bwd_requirement(dims, bwd_profs, bwd_sched),
             profiles=bwd_profs))
-        for fwd in (ops[1], ops[0]):            # PrimaryCaps, then Conv1
+        for fwd in (pc_op, conv1_op):           # PrimaryCaps, then Conv1
             wl = fwd.workload
-            matmuls = 3 if fwd.fuses_squash else 2   # + pre-act recompute
+            # + pre-act recompute: the squash backward replays the conv
+            # output (always, on a pipelined plan -- its VJP recomputes
+            # pre-activation from patches regardless of n-tile alignment).
+            matmuls = 3 if (fwd.fuses_squash
+                            or (pipe_sched is not None
+                                and fwd is pc_op)) else 2
             patches = wl.m * wl.k * ELEM_BYTES       # dpatches write + read
             prof = _backward_profile(fwd.profile)
             ops.append(OpPlan(

@@ -22,6 +22,8 @@ from repro.kernels.caps_votes import caps_votes as _caps_votes
 from repro.kernels.conv_im2col import conv2d_im2col as _conv2d
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.primary_routing import \
+    primary_caps_routing as _primary_routing
 from repro.kernels.routing import routing as _routing
 from repro.kernels.squash import squash as _squash
 from repro.kernels.votes_routing import votes_routing as _votes_routing
@@ -205,6 +207,103 @@ def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
                           bwd_block_i=bwd_block_i, interpret=interpret)
 
 
+@functools.lru_cache(maxsize=64)
+def planned_primary_routing(p_pos: int, k_in: int, n_ch: int, num_caps: int,
+                            caps_dim: int, jd: int, num_classes: int,
+                            iters: int, batch: int,
+                            vmem_budget: int = VMEM_BYTES
+                            ) -> tuple[str, int, int, tuple[int, int, int]]:
+    """Memoized (mode, block_i, block_k, conv tiles) decision for the
+    pipelined PrimaryCaps->ClassCaps megakernel."""
+    sched = execplan.plan_primary_routing(
+        p_pos, k_in, n_ch, num_caps, caps_dim, jd, num_classes,
+        batch=batch, iters=iters, vmem_budget=vmem_budget)
+    return (sched.mode, sched.block_i, sched.block_k,
+            (sched.block.block_m, sched.block.block_k, sched.block.block_n))
+
+
+def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
+                    w_cc: jax.Array, *, plan=None, stride: int | None = None,
+                    iters: int | None = None, num_classes: int | None = None,
+                    mode: str | None = None, block_i: int | None = None,
+                    block_k: int | None = None, bwd_mode: str | None = None,
+                    bwd_block_i: int | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """Pipelined PrimaryCaps conv + votes/routing as ONE kernel: x is the
+    Conv1 output [B, H, W, Cin], w_pc/b_pc the PrimaryCaps conv params,
+    w_cc [I, J*D, C] the routing weights -> v [B, J*D].  The inter-layer
+    activation u streams from VMEM scratch, never HBM.
+
+    Schedule (``mode``/``block_i``/``block_k`` and the backward-replay
+    conv tiles) comes from ``plan.op("PrimaryCaps-Routing")``
+    (``compile_plan(pipeline=True)``) or the memoized plan decision.
+    Differentiable: the routing-backward schedule resolves exactly like
+    ``votes_routing``'s (the pipelined VJP composes the per-op backward
+    kernels, so the plan's backward OpPlans apply unchanged).
+    """
+    if stride is None:
+        stride = plan.cfg.pc_stride if plan is not None else 2
+    if iters is None:
+        iters = plan.cfg.routing_iters if plan is not None else 3
+    if num_classes is None:
+        num_classes = plan.cfg.num_classes if plan is not None else 10
+    num_caps, jd, caps_dim = w_cc.shape
+    kh, kw, cin, n_ch = w_pc.shape
+    oh = (x.shape[1] - kh) // stride + 1
+    ow = (x.shape[2] - kw) // stride + 1
+    if mode is None or block_i is None or block_k is None:
+        if plan is not None:
+            if x.shape[0] > plan.batch:
+                raise ValueError(
+                    f"primary_routing: batch {x.shape[0]} exceeds the "
+                    f"plan's batch {plan.batch}; recompile the plan for "
+                    f"this batch")
+            op = plan.op(execplan.PIPE_NAME)
+            mode = mode or op.mode
+            block_i = block_i or op.block_i
+            block_k = block_k or op.block_k
+            cb = (op.block.block_m, op.block.block_k, op.block.block_n)
+        else:
+            pmode, pbi, pbk, cb = planned_primary_routing(
+                oh * ow, kh * kw * cin, n_ch, num_caps, caps_dim, jd,
+                num_classes, iters, x.shape[0])
+            mode = mode or pmode
+            block_i = block_i or pbi
+            block_k = block_k or pbk
+    else:
+        cb = planned_conv_blocks(x.shape[0] * oh * ow, kh * kw * cin, n_ch)
+    if bwd_mode is None or bwd_block_i is None:
+        budget = plan.vmem_budget if plan is not None else VMEM_BYTES
+        bwd_op = None
+        if plan is not None and plan.train:
+            bwd_op = plan.op(execplan.FUSED_NAME + execplan.BWD_SUFFIX)
+        if bwd_op is not None:
+            bwd_mode = bwd_mode or bwd_op.mode
+            bwd_block_i = bwd_block_i or bwd_op.block_i
+        else:
+            try:
+                pbmode, pbbi = planned_votes_routing_bwd(
+                    num_caps, caps_dim, jd, num_classes, iters, x.shape[0],
+                    budget)
+            except execplan.PlanError as err:
+                _warn_bwd_fallback_once(
+                    f"primary_routing: no feasible routing-backward "
+                    f"schedule under the {budget} B VMEM budget ({err}); "
+                    f"the forward runs fine, but differentiating this "
+                    f"call will reuse the forward schedule "
+                    f"(mode={mode!r}, block_i={block_i}) with a backward "
+                    f"VMEM footprint the plan never validated")
+                pbmode, pbbi = mode, block_i
+            bwd_mode = bwd_mode or pbmode
+            bwd_block_i = bwd_block_i or pbbi
+    return _primary_routing(
+        x, w_pc, b_pc, w_cc, stride=stride, iters=iters,
+        num_classes=num_classes, mode=mode, block_i=block_i,
+        block_k=block_k, bwd_mode=bwd_mode, bwd_block_i=bwd_block_i,
+        conv_block_m=cb[0], conv_block_k=cb[1], conv_block_n=cb[2],
+        interpret=interpret)
+
+
 def squash(x: jax.Array, *, plan=None, block_rows: int | None = None,
            interpret: bool = True) -> jax.Array:
     if block_rows is None:
@@ -227,7 +326,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                   interpret=interpret)
 
 
-__all__ = ["conv2d", "caps_votes", "routing", "votes_routing", "squash",
-           "rmsnorm", "flash_attention", "planned_block_i",
-           "planned_conv_blocks", "planned_votes_routing",
-           "planned_votes_routing_bwd", "ref"]
+__all__ = ["conv2d", "caps_votes", "routing", "votes_routing",
+           "primary_routing", "squash", "rmsnorm", "flash_attention",
+           "planned_block_i", "planned_conv_blocks",
+           "planned_votes_routing", "planned_votes_routing_bwd",
+           "planned_primary_routing", "ref"]

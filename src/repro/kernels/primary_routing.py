@@ -1,0 +1,407 @@
+"""Pipelined PrimaryCaps -> ClassCaps megakernel: u never touches HBM.
+
+CapStore's energy win is a WHOLE-network claim: the paper keeps
+inter-layer activations on-chip (DESCNet's inter-layer scratchpad,
+CapsAcc's cross-layer reuse), not just the per-op intermediates.  After
+PR 3/5 the routing megakernel already keeps ``u_hat`` in VMEM, but the
+PrimaryCaps output ``u [B, I, C]`` still round-tripped HBM between two
+``pallas_call``s.  This kernel runs the producer AND the consumer as ONE
+``pallas_call``:
+
+  produce   grid steps ``0 .. k_steps-1``.  The full producer output
+            lives in a ``[B, I_pad, C]`` VMEM scratch (u is the SMALLEST
+            tensor in the pair -- ~I*C floats per batch element -- which
+            is exactly why the paper parks it on-chip).  Each step
+            streams one K tile of the im2col patches and conv weight
+            past it, accumulating ``pre += patches_k @ w_k``; the last
+            K step applies the bias + per-capsule squash epilogue in
+            place.  Patches and the conv weight are read exactly ONCE
+            (a per-i-block recompute would re-stream the 21 MB MNIST
+            conv weight once per i-block -- strictly worse traffic than
+            the unfused pair).
+
+  consume   the remaining grid steps are byte-for-byte the fused
+            ``votes_routing`` schedules, reading u i-blocks from the
+            produce scratch instead of an HBM operand.  The FIRST
+            consume block rides the last produce step (u is fully
+            squashed by in-body program order), so the pair overlaps by
+            one step:
+
+            resident  ``k_steps - 1 + n_blocks`` total steps; votes
+                      into a ``[B, I_pad, J*D]`` scratch, all routing
+                      iterations at the last block.
+            streamed  ``k_steps - 1 + (iters+1) * n_blocks`` steps; the
+                      fused s+b pass over re-streamed W tiles (the PR-5
+                      single-stream-per-iteration schedule).
+
+The conv-output -> capsule reshape is layout-free: row ``i = p * groups
++ g`` of u is exactly channels ``[g*C, (g+1)*C)`` of spatial position
+``p``, so the produce scratch's rows ARE capsule rows and the epilogue
+squashes over the trailing axis directly.  The i axis is zero-padded in
+the SCRATCH (rows ``>= I`` stay at their zero initialisation, are
+skipped by the epilogue, and are inert under the routing reduction --
+the ``votes_routing`` padding argument verbatim, minus the host-side
+copy).
+
+**Backward** (``jax.custom_vjp``): recompute-from-patches.  The saved
+residuals are the raw operands ``(x, W_pc, b_pc, W_cc)``; the backward
+replays the producer (im2col + blocked matmul, epilogue recomputed like
+the fused-squash conv backward), feeds the rebuilt u to the routing
+backward kernels (``votes_routing._vr_grad`` -- ``d u_hat`` stays in
+VMEM), pulls the squash VJP, and finishes with the conv backward's
+``matmul_at_b`` / ``matmul_bias_act`` / ``col2im_patches`` kernels.  It
+composes exactly the per-op backward OpPlans, so a pipelined training
+plan keeps the per-op backward schedule unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.capsnet import squash
+from repro.kernels.conv_im2col import (col2im_patches, im2col_patches,
+                                       matmul_at_b, matmul_bias_act)
+from repro.kernels.votes_routing import (_routing_iterations, _votes_block,
+                                         _vr_grad, _VRStatics)
+
+MODES = ("resident", "streamed")
+
+
+def _produce_u(t, patches_ref, wpc_ref, bias_ref, u_scr, *, k_steps: int,
+               p_pos: int, groups: int, caps_dim: int, i_dim: int):
+    """Produce phase: accumulate one K tile of the im2col matmul into the
+    resident output scratch; the last K step applies bias + squash in
+    place.  Rows ``>= i_dim`` keep their zero initialisation -- the
+    i-axis padding the consume phase relies on."""
+
+    @pl.when(t == 0)
+    def _():
+        u_scr[...] = jnp.zeros_like(u_scr)
+
+    @pl.when(t < k_steps)
+    def _():
+        bsz = patches_ref.shape[0]
+        prod = jnp.einsum("bpk,kn->bpn",
+                          patches_ref[...].astype(jnp.float32),
+                          wpc_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        u_scr[:, pl.ds(0, i_dim), :] += prod.reshape(bsz, i_dim, caps_dim)
+
+        @pl.when(t == k_steps - 1)
+        def _():
+            pre = u_scr[:, pl.ds(0, i_dim), :]
+            bias = bias_ref[0].reshape(groups, caps_dim)
+            caps = (pre.reshape(bsz, p_pos, groups, caps_dim)
+                    + bias[None, None])
+            u_scr[:, pl.ds(0, i_dim), :] = squash(caps).reshape(
+                bsz, i_dim, caps_dim)
+
+
+def _pipe_resident_kernel(patches_ref, wpc_ref, bias_ref, wcc_ref, o_ref,
+                          u_scr, votes_scr, *, k_steps: int, p_pos: int,
+                          groups: int, caps_dim: int, i_dim: int, iters: int,
+                          j: int, d: int, n_blocks: int, block_i: int):
+    t = pl.program_id(0)
+    _produce_u(t, patches_ref, wpc_ref, bias_ref, u_scr, k_steps=k_steps,
+               p_pos=p_pos, groups=groups, caps_dim=caps_dim, i_dim=i_dim)
+
+    # The first consume block OVERLAPS the last produce step: u is fully
+    # squashed by the time the body reaches this point (in-body program
+    # order), so the grid is k_steps - 1 + n_blocks, not k_steps +
+    # n_blocks.
+    @pl.when(t >= k_steps - 1)
+    def _():
+        ib = t - (k_steps - 1)
+        rows = pl.ds(ib * block_i, block_i)
+        votes_scr[:, rows, :] = _votes_block(u_scr[:, rows, :], wcc_ref[...])
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            bsz, i_pad, jd = votes_scr.shape
+            v = _routing_iterations(
+                votes_scr[...].reshape(bsz, i_pad, j, d), iters)
+            o_ref[...] = v.reshape(bsz, j * d).astype(o_ref.dtype)
+
+
+def _pipe_streamed_kernel(patches_ref, wpc_ref, bias_ref, wcc_ref, o_ref,
+                          u_scr, b_scr, s_scr, v_scr, *, k_steps: int,
+                          p_pos: int, groups: int, caps_dim: int, i_dim: int,
+                          j: int, d: int, n_blocks: int, block_i: int,
+                          n_passes: int):
+    """Consume steps are ``votes_routing._streamed_kernel``'s fused s+b
+    pass verbatim, with the votes block recomputed from the produce
+    scratch instead of an HBM u operand."""
+    t = pl.program_id(0)
+    _produce_u(t, patches_ref, wpc_ref, bias_ref, u_scr, k_steps=k_steps,
+               p_pos=p_pos, groups=groups, caps_dim=caps_dim, i_dim=i_dim)
+
+    @pl.when(t >= k_steps - 1)
+    def _():  # first consume pass overlaps the last produce step
+        q = t - (k_steps - 1)
+        p = q // n_blocks
+        ib = q % n_blocks
+        rows = pl.ds(ib * block_i, block_i)
+        bsz = u_scr.shape[0]
+        uh4 = _votes_block(u_scr[:, rows, :],
+                           wcc_ref[...]).reshape(bsz, block_i, j, d)
+
+        @pl.when((p == 0) & (ib == 0))
+        def _():
+            b_scr[...] = jnp.zeros_like(b_scr)
+
+        @pl.when(p > 0)
+        def _():  # iteration p's logits update rides the same W stream
+            v = v_scr[...].reshape(bsz, j, d)
+            b_scr[:, rows, :] += jnp.einsum("bijd,bjd->bij", uh4, v)
+
+        @pl.when(ib == 0)
+        def _():
+            s_scr[...] = jnp.zeros_like(s_scr)
+
+        c = jax.nn.softmax(b_scr[:, rows, :], axis=2)
+        s_scr[...] += jnp.einsum("bij,bijd->bjd", c, uh4).reshape(bsz, j * d)
+
+        @pl.when(ib == n_blocks - 1)
+        def _():
+            v_scr[...] = squash(
+                s_scr[...].reshape(bsz, j, d)).reshape(bsz, j * d)
+
+            @pl.when(p == n_passes - 1)
+            def _():
+                o_ref[...] = v_scr[...].astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Forward dispatch + custom VJP
+# ---------------------------------------------------------------------------
+
+class _PRStatics(NamedTuple):
+    """Hashable non-differentiable schedule for the pipelined custom_vjp."""
+
+    stride: int
+    iters: int
+    num_classes: int
+    mode: str
+    block_i: int
+    block_k: int             # produce-phase K tile
+    bwd_mode: str            # routing backward (votes_routing._vr_grad)
+    bwd_block_i: int
+    conv_block_m: int        # producer-replay matmul tiles (backward)
+    conv_block_k: int
+    conv_block_n: int
+    interpret: bool
+
+
+def _pr_apply(st: _PRStatics, x, w_pc, b_pc, w_cc):
+    bsz, h, w_hw, _ = x.shape
+    kh, kw, cin, n_ch = w_pc.shape
+    oh = (h - kh) // st.stride + 1
+    ow = (w_hw - kw) // st.stride + 1
+    p_pos = oh * ow
+    kk = kh * kw * cin
+    i_dim, jd, caps_dim = w_cc.shape
+    groups = n_ch // caps_dim
+    j = st.num_classes
+    d = jd // j
+
+    patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
+                             interpret=st.interpret)          # [B, P, K]
+    wpc2 = w_pc.reshape(kk, n_ch)
+    bk = max(1, min(st.block_k, kk))
+    if kk % bk:                        # zero-pad K (conv_im2col idiom): a
+        pad = bk - kk % bk             # clamped tail K block would
+        patches = jnp.pad(patches, ((0, 0), (0, 0), (0, pad)))   # double-
+        wpc2 = jnp.pad(wpc2, ((0, pad), (0, 0)))                 # count rows
+    k_steps = patches.shape[2] // bk
+
+    block_i = max(1, min(st.block_i, i_dim))
+    n_blocks = pl.cdiv(i_dim, block_i)
+    i_pad = n_blocks * block_i
+    w_cc_p = (jnp.pad(w_cc, ((0, i_pad - i_dim), (0, 0), (0, 0)))
+              if i_pad != i_dim else w_cc)
+    bias2 = b_pc.reshape(1, n_ch)
+    out_shape = jax.ShapeDtypeStruct((bsz, jd), x.dtype)
+    common = dict(k_steps=k_steps, p_pos=p_pos, groups=groups,
+                  caps_dim=caps_dim, i_dim=i_dim, j=j, d=d,
+                  n_blocks=n_blocks, block_i=block_i)
+
+    # Produce-phase operands park on their final tile after step
+    # k_steps-1 (unchanged block index -> no refetch); W holds its first
+    # i-block until the consume steps start walking it.
+    patch_spec = pl.BlockSpec(
+        (bsz, p_pos, bk), lambda t: (0, 0, jnp.minimum(t, k_steps - 1)))
+    wpc_spec = pl.BlockSpec(
+        (bk, n_ch), lambda t: (jnp.minimum(t, k_steps - 1), 0))
+    bias_spec = pl.BlockSpec((1, n_ch), lambda t: (0, 0))
+    out_spec = pl.BlockSpec((bsz, jd), lambda t: (0, 0))
+
+    if st.mode == "resident":
+        kernel = functools.partial(_pipe_resident_kernel, iters=st.iters,
+                                   **common)
+        wcc_spec = pl.BlockSpec(
+            (block_i, jd, caps_dim),
+            lambda t: (jnp.clip(t - (k_steps - 1), 0, n_blocks - 1), 0, 0))
+        return pl.pallas_call(
+            kernel,
+            grid=(k_steps - 1 + n_blocks,),
+            in_specs=[patch_spec, wpc_spec, bias_spec, wcc_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            scratch_shapes=[
+                pltpu.VMEM((bsz, i_pad, caps_dim), jnp.float32),  # u
+                pltpu.VMEM((bsz, i_pad, jd), jnp.float32),        # votes
+            ],
+            interpret=st.interpret,
+        )(patches, wpc2, bias2, w_cc_p)
+
+    n_passes = st.iters + 1
+    kernel = functools.partial(_pipe_streamed_kernel, n_passes=n_passes,
+                               **common)
+    wcc_spec = pl.BlockSpec(
+        (block_i, jd, caps_dim),
+        lambda t: (jnp.maximum(t - (k_steps - 1), 0) % n_blocks, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(k_steps - 1 + n_passes * n_blocks,),
+        in_specs=[patch_spec, wpc_spec, bias_spec, wcc_spec],
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bsz, i_pad, caps_dim), jnp.float32),  # u
+            pltpu.VMEM((bsz, i_pad, j), jnp.float32),         # logits b
+            pltpu.VMEM((bsz, jd), jnp.float32),               # s accumulator
+            pltpu.VMEM((bsz, jd), jnp.float32),               # squashed v
+        ],
+        interpret=st.interpret,
+    )(patches, wpc2, bias2, w_cc_p)
+
+
+def _pr_grad(st: _PRStatics, x, w_pc, b_pc, w_cc, g):
+    """Recompute-from-patches backward: replay the producer, run the
+    routing backward on the rebuilt u, pull the squash VJP, finish with
+    the conv backward kernels -- exactly the per-op backward OpPlans."""
+    bsz, h, w_hw, cin = x.shape
+    kh, kw, _, n_ch = w_pc.shape
+    oh = (h - kh) // st.stride + 1
+    ow = (w_hw - kw) // st.stride + 1
+    p_pos = oh * ow
+    m = bsz * p_pos
+    kk = kh * kw * cin
+    i_dim, jd, caps_dim = w_cc.shape
+    groups = n_ch // caps_dim
+
+    patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
+                             interpret=st.interpret)
+    p2 = patches.reshape(m, kk)
+    wpc2 = w_pc.reshape(kk, n_ch)
+    pre = matmul_bias_act(p2, wpc2, b_pc, block_m=st.conv_block_m,
+                          block_k=st.conv_block_k, block_n=st.conv_block_n,
+                          epilogue="none", interpret=st.interpret)
+    caps = pre.reshape(m, groups, caps_dim)
+    u3, pull = jax.vjp(squash, caps)
+    u = u3.reshape(bsz, i_dim, caps_dim)
+
+    vr_st = _VRStatics(iters=st.iters, num_classes=st.num_classes,
+                       mode=st.bwd_mode, block_i=st.bwd_block_i,
+                       bwd_mode=st.bwd_mode, bwd_block_i=st.bwd_block_i,
+                       interpret=st.interpret)
+    du, dw_cc = _vr_grad(vr_st, u, w_cc, g.astype(jnp.float32))
+
+    dpre = pull(du.reshape(m, groups, caps_dim))[0].reshape(m, n_ch)
+    dbias = jnp.sum(dpre, axis=0).astype(b_pc.dtype)
+    dw_pc = matmul_at_b(p2, dpre, block_m=st.conv_block_m,
+                        block_k=st.conv_block_k, block_n=st.conv_block_n,
+                        interpret=st.interpret)
+    dpatches = matmul_bias_act(
+        dpre, jnp.transpose(wpc2).astype(jnp.float32),
+        jnp.zeros((kk,), jnp.float32),
+        block_m=st.conv_block_m, block_k=st.conv_block_n,
+        block_n=st.conv_block_k, epilogue="none", interpret=st.interpret)
+    dx = col2im_patches(dpatches.reshape(bsz, p_pos, kk), kh=kh, kw=kw,
+                        stride=st.stride, h=h, w=w_hw,
+                        interpret=st.interpret)
+    return (dx.astype(x.dtype), dw_pc.reshape(w_pc.shape).astype(w_pc.dtype),
+            dbias, dw_cc.astype(w_cc.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _pr_core(st: _PRStatics, x, w_pc, b_pc, w_cc):
+    return _pr_apply(st, x, w_pc, b_pc, w_cc)
+
+
+def _pr_core_fwd(st: _PRStatics, x, w_pc, b_pc, w_cc):
+    # Residuals are the raw operands: u is recomputed from patches in the
+    # backward, so the inter-layer activation never exists off-chip in
+    # either direction.
+    return _pr_apply(st, x, w_pc, b_pc, w_cc), (x, w_pc, b_pc, w_cc)
+
+
+def _pr_core_bwd(st: _PRStatics, res, g):
+    return _pr_grad(st, *res, g)
+
+
+_pr_core.defvjp(_pr_core_fwd, _pr_core_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "iters", "num_classes", "mode", "block_i", "block_k",
+    "bwd_mode", "bwd_block_i", "conv_block_m", "conv_block_k",
+    "conv_block_n", "interpret"))
+def primary_caps_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
+                         w_cc: jax.Array, *, stride: int = 2, iters: int = 3,
+                         num_classes: int = 10, mode: str = "resident",
+                         block_i: int = 128, block_k: int = 512,
+                         bwd_mode: str | None = None,
+                         bwd_block_i: int | None = None,
+                         conv_block_m: int = 128, conv_block_k: int = 128,
+                         conv_block_n: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """x: [B, H, W, Cin] (Conv1 output), w_pc: [KH, KW, Cin, N] HWIO,
+    b_pc: [N], w_cc: [I, J*D, C] -> v: [B, J*D].
+
+    ONE ``pallas_call`` running the PrimaryCaps conv (im2col matmul +
+    bias + per-capsule squash) and the full votes+routing consumer with
+    the inter-layer activation u resident in VMEM scratch.  Schedule
+    parameters come from the ExecutionPlan
+    (``plan.op("PrimaryCaps-Routing")``); see ``repro.kernels.ops`` for
+    the plan-aware wrapper.  The unfused two-call path
+    (``conv2d_im2col`` + ``votes_routing``) remains the fallback and the
+    parity oracle.
+
+    Differentiable: the custom VJP replays the producer from patches and
+    composes the per-op backward kernels (routing backward per
+    ``bwd_mode``/``bwd_block_i``, conv backward over the
+    ``conv_block_*`` tiles).
+    """
+    i_dim, jd, caps_dim = w_cc.shape
+    kh, kw, _, n_ch = w_pc.shape
+    if jd % num_classes:
+        raise ValueError(
+            f"votes dim {jd} not divisible by classes {num_classes}")
+    if n_ch % caps_dim:
+        raise ValueError(
+            f"conv channels {n_ch} not divisible by capsule dim {caps_dim}")
+    oh = (x.shape[1] - kh) // stride + 1
+    ow = (x.shape[2] - kw) // stride + 1
+    if oh * ow * (n_ch // caps_dim) != i_dim:
+        raise ValueError(
+            f"W_cc expects {i_dim} capsules, producer emits "
+            f"{oh * ow * (n_ch // caps_dim)}")
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; choose from {MODES}")
+    if iters < 1:
+        raise ValueError(f"routing needs iters >= 1, got {iters}")
+    bwd_mode = bwd_mode or mode
+    st = _PRStatics(stride=stride, iters=iters, num_classes=num_classes,
+                    mode=mode, block_i=max(1, min(block_i, i_dim)),
+                    block_k=block_k, bwd_mode=bwd_mode,
+                    bwd_block_i=max(1, min(bwd_block_i or block_i, i_dim)),
+                    conv_block_m=conv_block_m, conv_block_k=conv_block_k,
+                    conv_block_n=conv_block_n, interpret=interpret)
+    return _pr_core(st, x, w_pc, b_pc, w_cc)

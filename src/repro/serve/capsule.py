@@ -75,7 +75,10 @@ class CapsuleEngine:
         self.cfg = cfg
         self.slots = slots
         if plan is None and backend == "pallas":
-            plan = compile_plan(cfg, batch=slots)
+            # The engine compiles the PIPELINED plan: the forward runs
+            # Conv1 -> one primary_routing megakernel when the combined
+            # footprint fits (per-op fallback otherwise).
+            plan = compile_plan(cfg, batch=slots, pipeline=True)
         elif plan is not None and plan.batch < slots:
             # The jitted forward runs ALL slot rows every tick; a plan
             # compiled for fewer would either raise the kernel-level

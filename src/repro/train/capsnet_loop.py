@@ -1,32 +1,35 @@
 """Fault-tolerant CapsuleNet training through the Pallas backend.
 
 The custom VJPs (``kernels/conv_im2col``, ``kernels/votes_routing``,
-``kernels/squash``) make ``backend="pallas"`` differentiable end to end,
-so the margin-loss + masked-reconstruction objective trains through the
-SAME plan-driven kernels that serve inference -- with the backward
-schedule pinned by ``compile_plan(train=True)`` (backward OpPlans:
-per-mode VMEM footprints, ``u_hat``/``d u_hat`` never in HBM).
+``kernels/primary_routing``, ``kernels/squash``) make
+``backend="pallas"`` differentiable end to end, so the margin-loss +
+masked-reconstruction objective trains through the SAME plan-driven
+kernels that serve inference -- with the backward schedule pinned by
+``compile_plan(train=True)`` (backward OpPlans: per-mode VMEM
+footprints, ``u_hat``/``d u_hat`` never in HBM).  The forward side of
+the training plan is PIPELINED: PrimaryCaps epilogue streams into the
+routing megakernel when the combined footprint fits, per-op fallback
+otherwise.
 
-The loop reuses the repo's production training machinery on the CapsNet
-objective:
+Two optimizers:
 
-  * checkpoint/restart: async atomic checkpoints every N steps
-    (``train.checkpoint``), resume from the latest committed step with
-    deterministic data skip-ahead;
-  * NaN/divergence guard: a non-finite loss rolls params back to the
-    last committed checkpoint and skips the offending batch;
-  * heartbeat: a JSON heartbeat file per step for a supervisor.
+  * ``sgd`` (default): plain SGD at a fixed ``lr`` -- the original CI
+    smoke configuration, checkpoint state is params-only;
+  * ``adam``: AdamW + warmup/cosine decay from ``train.optimizer``
+    (``decay_steps`` pinned to the run horizon), checkpoint state gains
+    the m/v/step optimizer tree.
 
-CLI:  python -m repro.train.capsnet_loop --steps 20 --backend pallas
+The checkpoint/NaN-guard/heartbeat skeleton is
+``train.harness.FaultTolerantLoop`` -- shared with the LM loop.
+
+CLI:  python -m repro.train.capsnet_loop --steps 20 --backend pallas \
+          --optimizer adam
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import pathlib
-import time
 
 import jax
 import numpy as np
@@ -34,8 +37,9 @@ import numpy as np
 from repro.core import capsnet
 from repro.core.capsnet import CapsNetConfig
 from repro.core.execplan import compile_plan
-from repro.train import checkpoint as ckpt
 from repro.train.data import DataConfig, mnist_batch
+from repro.train.harness import FaultTolerantLoop
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
 
 SMOKE = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
                       pc_kernel=3, num_primary_groups=4, primary_dim=4,
@@ -48,6 +52,9 @@ class CapsLoopConfig:
     total_steps: int = 20
     batch: int = 16
     lr: float = 3e-2
+    optimizer: str = "sgd"            # "sgd" | "adam"
+    warmup_steps: int = 2             # adam only
+    weight_decay: float = 0.0         # adam only
     ckpt_every: int = 10
     ckpt_dir: str = "caps_checkpoints"
     keep: int = 3
@@ -59,38 +66,53 @@ class CapsLoopConfig:
     seed: int = 0
 
 
-class CapsTrainLoop:
-    """SGD over ``capsnet.total_loss`` with checkpoint + NaN-guard."""
+class CapsTrainLoop(FaultTolerantLoop):
+    """SGD/AdamW over ``capsnet.total_loss`` with checkpoint + NaN-guard."""
 
     def __init__(self, cfg: CapsNetConfig = SMOKE,
                  loop_cfg: CapsLoopConfig = CapsLoopConfig()):
+        if loop_cfg.optimizer not in ("sgd", "adam"):
+            raise ValueError(f"unknown optimizer {loop_cfg.optimizer!r}")
+        super().__init__(loop_cfg)
         self.cfg = cfg
-        self.loop_cfg = loop_cfg
-        self.step = 0
-        self.nan_skips = 0
-        self._last_committed = 0         # latest step THIS run checkpointed
-        self.history: list[dict] = []
-        self.checkpointer = ckpt.AsyncCheckpointer(loop_cfg.ckpt_dir,
-                                                   keep=loop_cfg.keep)
         self.data_cfg = DataConfig(kind="mnist",
                                    global_batch=loop_cfg.batch,
                                    seed=loop_cfg.seed)
         # ONE training plan: pins both the forward schedule and the
-        # backward OpPlans the custom VJPs execute.
-        self.plan = (compile_plan(cfg, batch=loop_cfg.batch, train=True)
+        # backward OpPlans the custom VJPs execute.  Pipelined: the
+        # forward runs the PrimaryCaps->ClassCaps pair as one kernel
+        # when it fits; the backward OpPlans are per-op either way.
+        self.plan = (compile_plan(cfg, batch=loop_cfg.batch, train=True,
+                                  pipeline=True)
                      if loop_cfg.backend == "pallas" else None)
+        self.opt_cfg = (OptConfig(peak_lr=loop_cfg.lr,
+                                  warmup_steps=loop_cfg.warmup_steps,
+                                  decay_steps=loop_cfg.total_steps,
+                                  weight_decay=loop_cfg.weight_decay)
+                        if loop_cfg.optimizer == "adam" else None)
 
-        def step_fn(params, images, labels):
-            (_, metrics), grads = jax.value_and_grad(
-                capsnet.total_loss, has_aux=True)(
-                    params, images, labels, cfg,
-                    backend=loop_cfg.backend, plan=self.plan,
-                    interpret=loop_cfg.interpret)
-            params = jax.tree_util.tree_map(
-                lambda p, g: p - loop_cfg.lr * g, params, grads)
-            return params, metrics
+        def loss_and_grads(params, images, labels):
+            return jax.value_and_grad(capsnet.total_loss, has_aux=True)(
+                params, images, labels, cfg,
+                backend=loop_cfg.backend, plan=self.plan,
+                interpret=loop_cfg.interpret)
 
-        self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        if loop_cfg.optimizer == "adam":
+            def step_fn(params, opt, images, labels):
+                (_, metrics), grads = loss_and_grads(params, images, labels)
+                params, opt, opt_m = adamw_update(params, grads, opt,
+                                                  self.opt_cfg)
+                return params, opt, {**metrics, **opt_m}
+
+            self._step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        else:
+            def step_fn(params, images, labels):
+                (_, metrics), grads = loss_and_grads(params, images, labels)
+                params = jax.tree_util.tree_map(
+                    lambda p, g: p - loop_cfg.lr * g, params, grads)
+                return params, metrics
+
+            self._step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
     # -- state ----------------------------------------------------------------
     def init_params(self):
@@ -98,82 +120,49 @@ class CapsTrainLoop:
                                    self.cfg)
 
     def try_restore(self, params):
-        latest = ckpt.latest_step(self.loop_cfg.ckpt_dir)
-        if latest is None:
-            return params, 0
-        restored, manifest = ckpt.restore({"params": params},
-                                          self.loop_cfg.ckpt_dir)
-        return restored["params"], manifest["step"]
+        state = {"params": params}
+        if self.opt_cfg is not None:
+            state["opt"] = init_opt_state(params)
+        state, start = self._try_restore(state)
+        return state["params"], start
+
+    # -- harness hooks ---------------------------------------------------------
+    def _init_state(self) -> dict:
+        params = self.init_params()
+        if self.opt_cfg is not None:
+            return {"params": params, "opt": init_opt_state(params)}
+        return {"params": params}
+
+    def _ckpt_extra(self) -> dict:
+        return {"backend": self.loop_cfg.backend,
+                "optimizer": self.loop_cfg.optimizer}
+
+    def _next_batch(self, step: int) -> dict:
+        return self._batch(step)
 
     def _batch(self, step: int) -> dict:
         return mnist_batch(self.data_cfg, step,
                            image_hw=self.cfg.image_hw)
 
-    def _heartbeat(self, step: int, loss: float) -> None:
-        if self.loop_cfg.heartbeat_path is None:
-            return
-        p = pathlib.Path(self.loop_cfg.heartbeat_path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps({"step": step, "time": time.time(),
-                                   "loss": loss}))
-        tmp.rename(p)
+    def _run_step(self, state: dict, batch) -> tuple[dict, dict]:
+        if "opt" in state:
+            params, opt, metrics = self._step_fn(
+                state["params"], state["opt"],
+                batch["images"], batch["labels"])
+            return {"params": params, "opt": opt}, metrics
+        params, metrics = self._step_fn(state["params"], batch["images"],
+                                        batch["labels"])
+        return {"params": params}, metrics
 
-    # -- main -----------------------------------------------------------------
-    def run(self, resume: bool = True) -> list[dict]:
-        params = self.init_params()
-        start = 0
-        if resume:
-            params, start = self.try_restore(params)
-        if start == 0:
-            ckpt.save({"params": params}, self.loop_cfg.ckpt_dir, 0,
-                      extra={"backend": self.loop_cfg.backend})
-        self.step = start
-        self._last_committed = start
+    def _extra_record(self, metrics: dict) -> dict:
+        rec = {"accuracy": float(jax.device_get(metrics["accuracy"]))}
+        if "lr" in metrics:
+            rec["lr"] = float(jax.device_get(metrics["lr"]))
+        return rec
 
-        while self.step < self.loop_cfg.total_steps:
-            batch = self._batch(self.step)
-            t0 = time.time()
-            params, metrics = self._step_fn(params, batch["images"],
-                                            batch["labels"])
-            loss = float(jax.device_get(metrics["loss"]))
-            dt = time.time() - t0
-
-            if not np.isfinite(loss):
-                # Roll back to THIS run's last committed checkpoint (a
-                # shared ckpt_dir may hold later steps from an abandoned
-                # run -- `latest_step` would silently resurrect them),
-                # then skip the poisoned batch.
-                self.nan_skips += 1
-                if self.nan_skips > self.loop_cfg.max_nan_skips:
-                    raise RuntimeError("too many non-finite steps")
-                self.checkpointer.wait()
-                restored, _ = ckpt.restore({"params": self.init_params()},
-                                           self.loop_cfg.ckpt_dir,
-                                           step=self._last_committed)
-                params = restored["params"]
-                self.step += 1             # drop the poisoned batch
-                continue
-
-            self.step += 1
-            rec = {"step": self.step, "loss": loss,
-                   "accuracy": float(jax.device_get(metrics["accuracy"])),
-                   "time_s": dt}
-            self.history.append(rec)
-            self._heartbeat(self.step, loss)
-            if self.step % self.loop_cfg.log_every == 0:
-                print(f"step {self.step:6d} loss {loss:9.4f} "
-                      f"acc {rec['accuracy']:5.2f} {dt * 1e3:7.1f} ms",
-                      flush=True)
-            if self.step % self.loop_cfg.ckpt_every == 0 \
-                    or self.step == self.loop_cfg.total_steps:
-                self.checkpointer.save_async(
-                    {"params": params}, self.step,
-                    extra={"backend": self.loop_cfg.backend})
-                self._last_committed = self.step
-
-        self.checkpointer.wait()
-        return self.history
+    def _log_line(self, rec: dict) -> str:
+        return (f"step {rec['step']:6d} loss {rec['loss']:9.4f} "
+                f"acc {rec['accuracy']:5.2f} {rec['time_s'] * 1e3:7.1f} ms")
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -181,6 +170,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--optimizer", choices=("sgd", "adam"), default="sgd",
+                    help="sgd: fixed-lr SGD (default); adam: AdamW + "
+                         "warmup/cosine from train.optimizer")
     ap.add_argument("--backend", choices=("jnp", "pallas"),
                     default="pallas")
     ap.add_argument("--config", choices=sorted(CONFIGS), default="smoke")
@@ -194,8 +186,8 @@ def main(argv: list[str] | None = None) -> int:
 
     loop = CapsTrainLoop(CONFIGS[args.config], CapsLoopConfig(
         total_steps=args.steps, batch=args.batch, lr=args.lr,
-        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
-        backend=args.backend))
+        optimizer=args.optimizer, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir, backend=args.backend))
     hist = loop.run(resume=not args.no_resume)
     if not hist:
         print("nothing to do (already at the requested step)")

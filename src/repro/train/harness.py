@@ -1,0 +1,193 @@
+"""Shared fault-tolerant training-loop skeleton.
+
+``train/loop.py`` (LM) and ``train/capsnet_loop.py`` (CapsNet) grew the
+same production behaviours independently -- async atomic checkpoints,
+resume-from-latest, NaN/divergence rollback to THIS run's last committed
+step, JSON heartbeat, preemption save, straggler detection.  This module
+is the one copy both loops subclass.
+
+The skeleton is a template method (``run``); subclasses supply the
+model-specific pieces as hooks:
+
+  * ``_init_state()``        -> checkpoint-shaped state dict
+  * ``_next_batch(step)``    -> batch for this step
+  * ``_run_step(state, b)``  -> (new state dict, metrics with "loss")
+  * ``_extra_record(m)``     -> extra per-step history fields
+  * ``_log_line(rec)``       -> the periodic progress line
+  * ``_ckpt_extra()``        -> manifest extras (model name, backend, ...)
+  * ``_skip_batch(step)``    -> advance a stateful data stream past a
+                               poisoned batch (stateless data: no-op)
+
+State is ALWAYS the checkpoint dict (``{"params": ...}`` or
+``{"params": ..., "opt": ...}``): restore, rollback and the preemption
+save then need no per-loop packing logic.  ``_run_step`` must dispatch
+through ``self._step_fn`` at CALL time, never capture it at construction
+-- tests (and fault-injection harnesses) monkey-patch ``loop._step_fn``
+after the loop is built.
+
+The loop config is duck-typed: any dataclass with ``total_steps,
+ckpt_every, ckpt_dir, keep, log_every, heartbeat_path, max_nan_skips``
+(plus optional ``straggler_factor``) works.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import signal
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+
+class FaultTolerantLoop:
+    """Template-method base for checkpointed, NaN-guarded training."""
+
+    def __init__(self, loop_cfg,
+                 on_straggler: Callable[[int, float], None] | None = None):
+        self.loop_cfg = loop_cfg
+        self.on_straggler = on_straggler or (lambda step, t: None)
+        self._stop = False
+        self.step = 0
+        self.nan_skips = 0
+        self._last_committed = 0         # latest step THIS run checkpointed
+        self.history: list[dict] = []
+        self._times: list[float] = []
+        self.checkpointer = ckpt.AsyncCheckpointer(loop_cfg.ckpt_dir,
+                                                   keep=loop_cfg.keep)
+
+    # -- lifecycle ------------------------------------------------------------
+    def request_stop(self, *_args) -> None:
+        self._stop = True
+
+    def install_signal_handler(self) -> None:       # pragma: no cover
+        signal.signal(signal.SIGTERM, self.request_stop)
+
+    # -- hooks (subclass responsibilities) ------------------------------------
+    def _init_state(self) -> dict:
+        raise NotImplementedError
+
+    def _next_batch(self, step: int):
+        raise NotImplementedError
+
+    def _run_step(self, state: dict, batch) -> tuple[dict, dict]:
+        raise NotImplementedError
+
+    def _extra_record(self, metrics: dict) -> dict:
+        return {}
+
+    def _log_line(self, rec: dict) -> str:
+        return (f"step {rec['step']:6d} loss {rec['loss']:9.4f} "
+                f"{rec['time_s'] * 1e3:7.1f} ms")
+
+    def _ckpt_extra(self) -> dict:
+        return {}
+
+    def _skip_batch(self, step: int) -> None:
+        """Advance a stateful data stream to ``step`` (deterministic
+        index-by-step data needs nothing here)."""
+
+    def _shardings(self):
+        """Shardings handed to ``ckpt.restore`` (elastic resume)."""
+        return None
+
+    def _begin(self, start: int) -> None:
+        """Called once per ``run`` after restore, before the first step
+        (LM loop: construct the data iterator at ``start``)."""
+
+    # -- shared machinery -----------------------------------------------------
+    def _try_restore(self, state: dict) -> tuple[dict, int]:
+        latest = ckpt.latest_step(self.loop_cfg.ckpt_dir)
+        if latest is None:
+            return state, 0
+        restored, manifest = ckpt.restore(state, self.loop_cfg.ckpt_dir,
+                                          shardings=self._shardings())
+        return restored, manifest["step"]
+
+    def _restore_committed(self) -> dict:
+        """Roll back to THIS run's last committed checkpoint (a shared
+        ckpt_dir may hold later steps from an abandoned run --
+        ``latest_step`` would silently resurrect them)."""
+        restored, _ = ckpt.restore(self._init_state(),
+                                   self.loop_cfg.ckpt_dir,
+                                   step=self._last_committed,
+                                   shardings=self._shardings())
+        return restored
+
+    def _heartbeat(self, step: int, metrics: dict) -> None:
+        if self.loop_cfg.heartbeat_path is None:
+            return
+        hb = {"step": step, "time": time.time(),
+              "loss": float(metrics.get("loss", np.nan))}
+        p = pathlib.Path(self.loop_cfg.heartbeat_path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(hb))
+        tmp.rename(p)
+
+    def _note_time(self, dt: float) -> None:
+        self._times.append(dt)
+        factor = getattr(self.loop_cfg, "straggler_factor", None)
+        if factor is None:
+            return
+        med = float(np.median(self._times[-21:]))
+        if len(self._times) > 5 and dt > factor * med:
+            self.on_straggler(self.step, dt)
+
+    def _save(self, state: dict, step: int) -> None:
+        self.checkpointer.save_async(state, step, extra=self._ckpt_extra())
+        self._last_committed = step
+
+    # -- main -----------------------------------------------------------------
+    def run(self, resume: bool = True) -> list[dict]:
+        state = self._init_state()
+        start = 0
+        if resume:
+            state, start = self._try_restore(state)
+        if start == 0:
+            ckpt.save(state, self.loop_cfg.ckpt_dir, 0,
+                      extra=self._ckpt_extra())
+        self._begin(start)
+        self.step = start
+        self._last_committed = start
+        self._times = []
+
+        while self.step < self.loop_cfg.total_steps and not self._stop:
+            batch = self._next_batch(self.step)
+            t0 = time.time()
+            state, metrics = self._run_step(state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = time.time() - t0
+
+            if not np.isfinite(loss):
+                self.nan_skips += 1
+                if self.nan_skips > self.loop_cfg.max_nan_skips:
+                    raise RuntimeError("too many non-finite steps")
+                self.checkpointer.wait()
+                state = self._restore_committed()
+                self._skip_batch(self.step + 1)   # drop the poisoned batch
+                self.step += 1
+                continue
+
+            self._note_time(dt)
+            self.step += 1
+            rec = {"step": self.step, "loss": loss, "time_s": dt,
+                   **self._extra_record(metrics)}
+            self.history.append(rec)
+            self._heartbeat(self.step, metrics)
+            if self.step % self.loop_cfg.log_every == 0:
+                print(self._log_line(rec), flush=True)
+            if self.step % self.loop_cfg.ckpt_every == 0 \
+                    or self.step == self.loop_cfg.total_steps:
+                self._save(state, self.step)
+
+        if self._stop:   # preemption: commit state before exiting
+            self.checkpointer.wait()
+            ckpt.save(state, self.loop_cfg.ckpt_dir, self.step,
+                      extra={**self._ckpt_extra(), "preempted": True})
+        self.checkpointer.wait()
+        return self.history

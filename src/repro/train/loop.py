@@ -14,24 +14,24 @@ Production behaviours, all exercised by tests on CPU:
   * straggler hook: per-step wall time is tracked; steps slower than
     ``straggler_factor`` x running median invoke ``on_straggler`` (in a
     real deployment: trigger re-sharding / hot-spare swap; here: logged).
+
+The skeleton (checkpoint/rollback/heartbeat/preemption) lives in
+``train.harness.FaultTolerantLoop``; this subclass binds it to the LM
+objective: jitted AdamW step, ``DataIterator`` stream with deterministic
+skip-ahead, elastic restore through ``param_shardings``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import json
-import pathlib
-import signal
-import time
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_model
-from repro.train import checkpoint as ckpt
 from repro.train.data import DataConfig, DataIterator
+from repro.train.harness import FaultTolerantLoop
 from repro.train.optimizer import OptConfig, init_opt_state
 
 
@@ -48,35 +48,21 @@ class LoopConfig:
     seed: int = 0
 
 
-class TrainLoop:
+class TrainLoop(FaultTolerantLoop):
     def __init__(self, model_cfg: ModelConfig, opt_cfg: OptConfig,
                  data_cfg: DataConfig, loop_cfg: LoopConfig,
                  shd=None, param_shardings=None,
                  on_straggler: Callable[[int, float], None] | None = None):
+        super().__init__(loop_cfg, on_straggler=on_straggler)
         self.model_cfg = model_cfg
         self.opt_cfg = opt_cfg
         self.data_cfg = data_cfg
-        self.loop_cfg = loop_cfg
         self.shd = shd
         self.param_shardings = param_shardings
-        self.on_straggler = on_straggler or (lambda step, t: None)
-        self._stop = False
-        self.step = 0
-        self.nan_skips = 0
-        self._last_committed = 0         # latest step THIS run checkpointed
-        self.history: list[dict] = []
-        self.checkpointer = ckpt.AsyncCheckpointer(loop_cfg.ckpt_dir,
-                                                   keep=loop_cfg.keep)
+        self._data: DataIterator | None = None
         from repro.launch.steps import make_train_step  # avoid import cycle
         self._step_fn = jax.jit(make_train_step(model_cfg, opt_cfg, shd),
                                 donate_argnums=(0, 1))
-
-    # -- lifecycle -----------------------------------------------------------
-    def request_stop(self, *_args) -> None:
-        self._stop = True
-
-    def install_signal_handler(self) -> None:       # pragma: no cover
-        signal.signal(signal.SIGTERM, self.request_stop)
 
     # -- state ----------------------------------------------------------------
     def init_state(self) -> tuple[Any, Any]:
@@ -85,95 +71,38 @@ class TrainLoop:
         return params, init_opt_state(params)
 
     def try_restore(self, params, opt_state):
-        latest = ckpt.latest_step(self.loop_cfg.ckpt_dir)
-        if latest is None:
-            return params, opt_state, 0
-        state = {"params": params, "opt": opt_state}
-        restored, manifest = ckpt.restore(state, self.loop_cfg.ckpt_dir,
-                                          shardings=self.param_shardings)
-        return restored["params"], restored["opt"], manifest["step"]
+        state, start = self._try_restore({"params": params,
+                                          "opt": opt_state})
+        return state["params"], state["opt"], start
 
-    def _save(self, params, opt_state, step: int) -> None:
-        self.checkpointer.save_async({"params": params, "opt": opt_state},
-                                     step, extra={"model": self.model_cfg.name})
-        self._last_committed = step
-
-    def _heartbeat(self, step: int, metrics: dict) -> None:
-        if self.loop_cfg.heartbeat_path is None:
-            return
-        hb = {"step": step, "time": time.time(),
-              "loss": float(metrics.get("loss", np.nan))}
-        p = pathlib.Path(self.loop_cfg.heartbeat_path)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps(hb))
-        tmp.rename(p)
-
-    # -- main -----------------------------------------------------------------
-    def run(self, resume: bool = True) -> list[dict]:
+    # -- harness hooks ---------------------------------------------------------
+    def _init_state(self) -> dict:
         params, opt_state = self.init_state()
-        start = 0
-        if resume:
-            params, opt_state, start = self.try_restore(params, opt_state)
-        if start == 0:
-            ckpt.save({"params": params, "opt": opt_state},
-                      self.loop_cfg.ckpt_dir, 0,
-                      extra={"model": self.model_cfg.name})
-        data = DataIterator(self.data_cfg, start_step=start)
-        self.step = start
-        self._last_committed = start
-        times: list[float] = []
+        return {"params": params, "opt": opt_state}
 
-        while self.step < self.loop_cfg.total_steps and not self._stop:
-            batch = next(data)
-            t0 = time.time()
-            params, opt_state, metrics = self._step_fn(params, opt_state,
-                                                       batch)
-            loss = float(jax.device_get(metrics["loss"]))
-            dt = time.time() - t0
+    def _shardings(self):
+        return self.param_shardings
 
-            if not np.isfinite(loss):
-                # Roll back to THIS run's last committed checkpoint (a
-                # shared ckpt_dir may hold later steps from an abandoned
-                # run -- `latest_step` would silently resurrect them),
-                # then skip the poisoned batch.
-                self.nan_skips += 1
-                if self.nan_skips > self.loop_cfg.max_nan_skips:
-                    raise RuntimeError("too many non-finite steps")
-                self.checkpointer.wait()
-                params, opt_state = self.init_state()
-                restored, _ = ckpt.restore(
-                    {"params": params, "opt": opt_state},
-                    self.loop_cfg.ckpt_dir, step=self._last_committed,
-                    shardings=self.param_shardings)
-                params, opt_state = restored["params"], restored["opt"]
-                data.skip_to(self.step + 1)   # drop the poisoned batch
-                self.step += 1
-                continue
+    def _ckpt_extra(self) -> dict:
+        return {"model": self.model_cfg.name}
 
-            times.append(dt)
-            med = float(np.median(times[-21:]))
-            if len(times) > 5 and dt > self.loop_cfg.straggler_factor * med:
-                self.on_straggler(self.step, dt)
+    def _begin(self, start: int) -> None:
+        self._data = DataIterator(self.data_cfg, start_step=start)
 
-            self.step += 1
-            rec = {"step": self.step, "loss": loss, "time_s": dt,
-                   "grad_norm": float(jax.device_get(metrics["grad_norm"]))}
-            self.history.append(rec)
-            self._heartbeat(self.step, metrics)
-            if self.step % self.loop_cfg.log_every == 0:
-                print(f"step {self.step:6d} loss {loss:9.4f} "
-                      f"gnorm {rec['grad_norm']:8.3f} {dt*1e3:7.1f} ms",
-                      flush=True)
-            if self.step % self.loop_cfg.ckpt_every == 0 \
-                    or self.step == self.loop_cfg.total_steps:
-                self._save(params, opt_state, self.step)
+    def _next_batch(self, step: int):
+        return next(self._data)
 
-        if self._stop:   # preemption: commit state before exiting
-            self.checkpointer.wait()
-            ckpt.save({"params": params, "opt": opt_state},
-                      self.loop_cfg.ckpt_dir, self.step,
-                      extra={"model": self.model_cfg.name,
-                             "preempted": True})
-        self.checkpointer.wait()
-        return self.history
+    def _skip_batch(self, step: int) -> None:
+        self._data.skip_to(step)
+
+    def _run_step(self, state: dict, batch) -> tuple[dict, dict]:
+        params, opt_state, metrics = self._step_fn(state["params"],
+                                                   state["opt"], batch)
+        return {"params": params, "opt": opt_state}, metrics
+
+    def _extra_record(self, metrics: dict) -> dict:
+        return {"grad_norm": float(jax.device_get(metrics["grad_norm"]))}
+
+    def _log_line(self, rec: dict) -> str:
+        return (f"step {rec['step']:6d} loss {rec['loss']:9.4f} "
+                f"gnorm {rec['grad_norm']:8.3f} {rec['time_s']*1e3:7.1f} ms")
