@@ -7,7 +7,9 @@ not raw speed off-TPU), the PIPELINED plan (Conv1 -> one
 inter-layer HBM bytes the pipelining eliminates, times the im2col conv
 kernels and the fused votes+routing megakernel against the split
 ``caps_votes`` -> ``routing`` pair (with the modeled HBM bytes each moves
--- the u_hat round-trip the fusion kills), prints the compiled plan, and
+-- the u_hat round-trip the fusion kills), prints the compiled plan,
+times the 3-block CIFAR-10 ResCaps stack (per-layer fused OpPlans,
+modeled per-layer HBM bytes, reversible-backward grad vs jnp), and
 drives the slot-based ``CapsuleEngine`` over a request stream reporting
 its full ``stats()`` (the CI perf-trajectory rows in
 ``BENCH_capsule.json``).
@@ -15,10 +17,13 @@ its full ``stats()`` (the CI perf-trajectory rows in
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import numpy as np
 
 from benchmarks.common import row, timed
+from repro.configs import registry
 from repro.core import capsnet, execplan
 from repro.core.capsnet import CapsNetConfig
 from repro.core.execplan import (BWD_SUFFIX, FUSED_NAME, PIPE_NAME,
@@ -35,6 +40,7 @@ CFG = CapsNetConfig(image_hw=14, conv1_channels=16, conv1_kernel=5,
                     pc_kernel=3, num_primary_groups=4, primary_dim=4,
                     class_dim=8, use_decoder=False)
 BATCH = 4
+DEEP_BATCH = 2                 # the 3-block CIFAR-10 smoke stack rows
 REQUESTS = 16
 
 
@@ -175,6 +181,52 @@ def main() -> None:
     row("votes-routing-bwd/hbm-bytes-uhat-saved", 0.0,
         f"{uhat_bwd:.0f} (u_hat + d_u_hat round-trips killed; fused bwd "
         f"uhat_hbm_bytes={bwd_op.uhat_hbm_bytes:.0f})")
+
+    # DEEP STACK: the 3-block CIFAR-10 ResCaps graph (smoke widths -- the
+    # comparison is the per-layer plan + reversible backward, not raw
+    # speed off-TPU).  One fused votes_routing OpPlan per routing-layer
+    # instance, per-layer modeled HBM bytes, and the flat-in-depth
+    # activation residency of the reversible backward.
+    deep_cfg = dataclasses.replace(registry.get_smoke_config("capsnet-cifar10"),
+                                   use_decoder=False)
+    dkey = jax.random.PRNGKey(1)
+    dparams = capsnet.init_params(dkey, deep_cfg)
+    dimgs = jax.random.uniform(
+        dkey, (DEEP_BATCH, deep_cfg.image_hw, deep_cfg.image_hw,
+               deep_cfg.in_channels))
+    dplan = compile_plan(deep_cfg, batch=DEEP_BATCH, train=True)
+    stack = deep_cfg.routing_stack()
+    for op in dplan.ops:
+        if op.name.startswith(FUSED_NAME) and not op.name.endswith(BWD_SUFFIX):
+            row(f"deep-stack/hbm-bytes/{op.name}", 0.0,
+                f"{op.hbm_bytes:.0f} (mode={op.mode} block_i={op.block_i})")
+    row("deep-stack/activation-bytes-reversible", 0.0,
+        f"{execplan.activation_residency_bytes(deep_cfg, batch=DEEP_BATCH):.0f}"
+        f" ({len(stack)} routing layers, 3 ResCaps blocks)")
+    row("deep-stack/activation-bytes-saved", 0.0,
+        f"{execplan.activation_residency_bytes(deep_cfg, batch=DEEP_BATCH, reversible=False):.0f}")
+    d_jnp = jax.jit(lambda p, x: capsnet.forward(p, x, deep_cfg)["lengths"])
+    d_pal = jax.jit(lambda p, x: capsnet.forward(
+        p, x, deep_cfg, backend="pallas", plan=dplan)["lengths"])
+    dwant, us = timed(lambda: np.asarray(d_jnp(dparams, dimgs)), repeats=5)
+    row("deep-stack-forward-jnp", us,
+        f"batch={DEEP_BATCH} layers={len(stack)}")
+    dgot, us = timed(lambda: np.asarray(d_pal(dparams, dimgs)), repeats=5)
+    row("deep-stack-forward-pallas", us,
+        f"maxdiff={np.abs(dgot - dwant).max():.2e}")
+    dlabels = jax.random.randint(dkey, (DEEP_BATCH,), 0, deep_cfg.num_classes)
+    dg_jnp = jax.jit(jax.grad(
+        lambda p, x, y: capsnet.total_loss(p, x, y, deep_cfg)[0]))
+    dg_pal = jax.jit(jax.grad(
+        lambda p, x, y: capsnet.total_loss(
+            p, x, y, deep_cfg, backend="pallas", plan=dplan)[0]))
+    _, us = timed(lambda: np.asarray(dg_jnp(dparams, dimgs, dlabels)["cc_w"]),
+                  repeats=5)
+    row("deep-stack-grad-jnp", us, f"batch={DEEP_BATCH}")
+    _, us = timed(lambda: np.asarray(dg_pal(dparams, dimgs, dlabels)["cc_w"]),
+                  repeats=5)
+    row("deep-stack-grad-pallas", us,
+        "reversible bwd: block inputs recomputed, not saved")
 
     engine = CapsuleEngine(params, CFG, slots=BATCH, plan=plan)
     pool = np.asarray(imgs)

@@ -1,0 +1,48 @@
+"""CapsuleNet on SVHN: a mixed plain + residual capsule stack.
+
+Street-view digits at CIFAR geometry (32x32x3).  The stack leads with a
+PLAIN bottleneck layer (64 capsules x 8D -- routing compresses the
+primary grid before depth is added) and follows with two reversible
+``ResCapsBlock``s, so the graph compiler's plain-then-residual walk, the
+PrimaryCaps pipeline eligibility (first layer non-residual), and the
+mixed saved/reversible activation accounting all get a named workload.
+Selectable via ``--arch capsnet-svhn``.
+"""
+
+from repro.core.capsnet import CapsLayerSpec, CapsNetConfig, ResCapsBlock
+
+
+def config() -> CapsNetConfig:
+    return CapsNetConfig(
+        image_hw=32,
+        in_channels=3,
+        conv1_channels=256,
+        conv1_kernel=9,
+        pc_kernel=9,
+        pc_stride=2,
+        num_primary_groups=32,
+        primary_dim=8,
+        num_classes=10,
+        class_dim=16,
+        decoder_hidden=(512, 1024),
+        caps_layers=(CapsLayerSpec(num_caps=64, caps_dim=8),
+                     ResCapsBlock(), ResCapsBlock()),
+    )
+
+
+def smoke_config() -> CapsNetConfig:
+    """Same topology (plain bottleneck + 2 blocks), toy widths for CI."""
+    return CapsNetConfig(
+        image_hw=16,
+        in_channels=3,
+        conv1_channels=32,
+        conv1_kernel=5,
+        pc_kernel=3,
+        pc_stride=2,
+        num_primary_groups=4,
+        primary_dim=4,
+        class_dim=8,
+        decoder_hidden=(32, 64),
+        caps_layers=(CapsLayerSpec(num_caps=16, caps_dim=4),
+                     ResCapsBlock(), ResCapsBlock()),
+    )

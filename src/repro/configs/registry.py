@@ -16,16 +16,25 @@ _MODULES = {
     "chameleon-34b": "chameleon_34b",
     "zamba2-1.2b": "zamba2_1p2b",
     "capsnet-mnist": "capsnet_mnist",
+    "capsnet-cifar10": "capsnet_cifar10",
+    "capsnet-svhn": "capsnet_svhn",
 }
 
-# Short aliases accepted on the CLI.
+# Short aliases accepted on the CLI (underscore spellings included, so
+# ``--arch capsnet_mnist`` works the way the module files are named).
 _ALIASES = {
     "phi3.5-moe": "phi3.5-moe-42b-a6.6b",
     "deepseek-v2-lite": "deepseek-v2-lite-16b",
     "capsnet": "capsnet-mnist",
+    "capsnet_mnist": "capsnet-mnist",
+    "capsnet_cifar10": "capsnet-cifar10",
+    "capsnet_svhn": "capsnet-svhn",
 }
 
-LM_ARCHS = [a for a in _MODULES if a != "capsnet-mnist"]
+# The LM benchmark pool: every arch that is not a CapsuleNet workload.
+LM_ARCHS = [a for a in _MODULES if not a.startswith("capsnet")]
+
+CAPSNET_ARCHS = [a for a in _MODULES if a.startswith("capsnet")]
 
 
 def canonical(name: str) -> str:

@@ -102,6 +102,26 @@ class CapsNetDims:
 MNIST_DIMS = CapsNetDims()
 
 
+@dataclasses.dataclass(frozen=True)
+class RoutingLayerDims:
+    """Duck-typed dims view of ONE routing layer of a deep capsule stack.
+
+    The three routing profile builders (``classcaps_fc_profile``,
+    ``sum_squash_profile``, ``update_sum_profile``) only read these five
+    fields, so any layer of a ``caps_layers`` chain -- including the
+    coupling halves of a ResCapsBlock -- profiles through the SAME
+    builders the paper's single ClassCaps layer uses: ``num_primary`` is
+    the layer's in-capsule count, ``num_classes``/``class_dim`` its
+    output capsules.
+    """
+
+    num_primary: int
+    primary_dim: int
+    num_classes: int
+    class_dim: int
+    routing_iters: int
+
+
 def dims_from_config(cfg) -> CapsNetDims:
     """Derive the dataflow dims from a ``CapsNetConfig`` (duck-typed)."""
     return CapsNetDims(
@@ -319,18 +339,11 @@ def update_sum_profile(dims: CapsNetDims = MNIST_DIMS) -> OperationProfile:
     )
 
 
-def _linebuf_variant(ops: list[OperationProfile],
-                     dims: CapsNetDims) -> list[OperationProfile]:
-    """Alternative dataflow ('linebuf'): convolutions keep only a
-    kernel-height line buffer of the input plus a 3-row accumulator strip
-    (instead of full-fmap residency), and the votes live in the DATA
-    memory during routing.  The paper's Fig. 4 bar values are not
-    recoverable from the text, so both dataflows are exposed and compared
-    in ``benchmarks/bench_dataflow.py``: 'resident' (default) satisfies
-    all of the paper's qualitative claims; 'linebuf' trades PrimaryCaps
-    footprint for higher power-gating headroom (closer to the paper's
-    published PG savings)."""
-    c1, pc, cc, ss, us = ops
+def _linebuf_convs(c1: OperationProfile, pc: OperationProfile,
+                   dims: CapsNetDims) -> tuple[OperationProfile,
+                                               OperationProfile]:
+    """'linebuf' conv variants: kernel-height line buffer of the input
+    plus a 3-row accumulator strip instead of full-fmap residency."""
     c1 = dataclasses.replace(
         c1, accum_mem=3 * dims.conv1_out * dims.conv1_cout * ACC_BYTES)
     pc = dataclasses.replace(
@@ -340,19 +353,107 @@ def _linebuf_variant(ops: list[OperationProfile],
         # input streamed from off-chip once per 16-channel output group
         data_writes=pc.data_writes * max(dims.pc_cout // ARRAY_DIM, 1),
     )
-    votes_b = dims.num_primary * dims.num_classes * dims.class_dim * ACT_BYTES
-    logits_b = dims.num_primary * dims.num_classes * ACC_BYTES
+    return c1, pc
+
+
+def _linebuf_routing(cc: OperationProfile, ss: OperationProfile,
+                     us: OperationProfile, ldims) -> tuple[OperationProfile,
+                                                           OperationProfile,
+                                                           OperationProfile]:
+    """'linebuf' routing variants for ONE layer: the votes live in the
+    DATA memory during routing (``ldims``: the layer's own shape)."""
+    votes_b = (ldims.num_primary * ldims.num_classes * ldims.class_dim
+               * ACT_BYTES)
+    logits_b = ldims.num_primary * ldims.num_classes * ACC_BYTES
     # s/v accumulator state: 4 fp32 temporaries per class-capsule element
     # (2560 B for the default MNIST network).
-    sv_b = 4 * dims.num_classes * dims.class_dim * ACC_BYTES
+    sv_b = 4 * ldims.num_classes * ldims.class_dim * ACC_BYTES
     cc = dataclasses.replace(
         cc, data_mem=cc.data_mem + votes_b,                    # votes in data
-        accum_mem=ARRAY_DIM * dims.num_classes * dims.class_dim * ACC_BYTES)
+        accum_mem=ARRAY_DIM * ldims.num_classes * ldims.class_dim * ACC_BYTES)
     ss = dataclasses.replace(ss, data_mem=votes_b + ss.data_mem,
                              accum_mem=logits_b + sv_b)
     us = dataclasses.replace(us, data_mem=votes_b + us.data_mem,
                              accum_mem=logits_b + sv_b)
+    return cc, ss, us
+
+
+def _linebuf_variant(ops: list[OperationProfile],
+                     dims: CapsNetDims) -> list[OperationProfile]:
+    """Alternative dataflow ('linebuf') of the fixed five-op model.  The
+    paper's Fig. 4 bar values are not recoverable from the text, so both
+    dataflows are exposed and compared in ``benchmarks/bench_dataflow.py``:
+    'resident' (default) satisfies all of the paper's qualitative claims;
+    'linebuf' trades PrimaryCaps footprint for higher power-gating
+    headroom (closer to the paper's published PG savings)."""
+    c1, pc, cc, ss, us = ops
+    c1, pc = _linebuf_convs(c1, pc, dims)
+    cc, ss, us = _linebuf_routing(cc, ss, us, dims)
     return [c1, pc, cc, ss, us]
+
+
+def capsnet_stack_profiles(dataflow: str = "resident",
+                           dims: CapsNetDims = MNIST_DIMS,
+                           layers=None) -> list[OperationProfile]:
+    """Per-operation profiles for a CHAIN of routing-capsule layers.
+
+    ``layers`` describes the routing stack as ``(suffix, in_caps, in_dim,
+    num_caps, caps_dim, iters)`` tuples (``None``: the single ClassCaps
+    layer of ``dims`` -- exactly ``capsnet_profiles``).  Each layer
+    contributes the three routing operations via ``RoutingLayerDims``
+    with ``suffix`` appended to the names (repeated layers must not
+    collide on a profile/phase name), so a deep stack is
+    ``[Conv1, PrimaryCaps, FC[0], SS[0], US[0], ..., FC, SS, US]``.
+
+    Off-chip accesses generalize paper Eq. (1)/(2): the DRAM-LOADING ops
+    (the convs and each layer's FC, which stream weights/activations in)
+    get reads = their on-chip fills; a loader's produced feature map is
+    spilled (writes) when its consumer is the NEXT loader -- Conv1 ->
+    PrimaryCaps -> FC[0] -> ... -> FC -- while the final FC's output and
+    every routing phase stay on-chip.  DRAM-stall cycles apply uniformly.
+    """
+    from repro.core.energy import DRAM_BYTES_PER_CYCLE
+
+    if layers is None:
+        layers = (("", dims.num_primary, dims.primary_dim,
+                   dims.num_classes, dims.class_dim, dims.routing_iters),)
+    ops = [conv1_profile(dims), primarycaps_profile(dims)]
+    loaders = [0, 1]                     # indices of DRAM-loading ops
+    for suffix, in_caps, in_dim, num_caps, caps_dim, iters in layers:
+        ld = RoutingLayerDims(num_primary=in_caps, primary_dim=in_dim,
+                              num_classes=num_caps, class_dim=caps_dim,
+                              routing_iters=iters)
+        cc, ss, us = (classcaps_fc_profile(ld), sum_squash_profile(ld),
+                      update_sum_profile(ld))
+        if dataflow == "linebuf":
+            cc, ss, us = _linebuf_routing(cc, ss, us, ld)
+        if suffix:
+            cc, ss, us = (dataclasses.replace(p, name=p.name + suffix)
+                          for p in (cc, ss, us))
+        loaders.append(len(ops))
+        ops.extend([cc, ss, us])
+    if dataflow == "linebuf":
+        ops[0], ops[1] = _linebuf_convs(ops[0], ops[1], dims)
+    elif dataflow != "resident":
+        raise ValueError(f"unknown dataflow {dataflow!r}")
+    loader_pos = {idx: n for n, idx in enumerate(loaders)}
+    out = []
+    for i, op in enumerate(ops):
+        if i in loader_pos:
+            n = loader_pos[i]
+            reads = op.weight_writes + op.data_writes          # Eq. (1)
+            nxt = loaders[n + 1] if n + 1 < len(loaders) else None
+            writes = ops[nxt].data_writes if nxt is not None else 0.0  # Eq. (2)
+        else:
+            reads = writes = 0.0                               # routing: on-chip
+        # Operations stall when the DRAM interface cannot keep up with the
+        # streamed weights (ClassCaps-FC is memory-bound: its 2.8 MiB of
+        # reuse-free weights dominate its runtime).
+        stream_cycles = (reads + writes) * ACT_BYTES / DRAM_BYTES_PER_CYCLE
+        out.append(dataclasses.replace(
+            op, offchip_reads=reads, offchip_writes=writes,
+            cycles=max(op.cycles, stream_cycles / max(op.repeats, 1))))
+    return out
 
 
 def capsnet_profiles(dataflow: str = "resident",
@@ -366,32 +467,10 @@ def capsnet_profiles(dataflow: str = "resident",
 
     ``dataflow``: "resident" (default, full-fmap residency) or "linebuf"
     (see ``_linebuf_variant``).  ``dims`` selects the network shape
-    (default: the paper's MNIST CapsuleNet).
+    (default: the paper's MNIST CapsuleNet).  The single-layer special
+    case of ``capsnet_stack_profiles``.
     """
-    from repro.core.energy import DRAM_BYTES_PER_CYCLE
-
-    ops = [conv1_profile(dims), primarycaps_profile(dims),
-           classcaps_fc_profile(dims), sum_squash_profile(dims),
-           update_sum_profile(dims)]
-    if dataflow == "linebuf":
-        ops = _linebuf_variant(ops, dims)
-    elif dataflow != "resident":
-        raise ValueError(f"unknown dataflow {dataflow!r}")
-    out = []
-    for i, op in enumerate(ops):
-        if i < 3:
-            reads = op.weight_writes + op.data_writes          # Eq. (1)
-            writes = ops[i + 1].data_writes if i + 1 < 3 else 0.0  # Eq. (2)
-        else:
-            reads = writes = 0.0                               # routing: on-chip
-        # Operations stall when the DRAM interface cannot keep up with the
-        # streamed weights (ClassCaps-FC is memory-bound: its 2.8 MiB of
-        # reuse-free weights dominate its runtime).
-        stream_cycles = (reads + writes) * ACT_BYTES / DRAM_BYTES_PER_CYCLE
-        out.append(dataclasses.replace(
-            op, offchip_reads=reads, offchip_writes=writes,
-            cycles=max(op.cycles, stream_cycles / max(op.repeats, 1))))
-    return out
+    return capsnet_stack_profiles(dataflow, dims)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,77 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+# Plan-op / PMU-phase name of one fused votes+routing layer.  The FINAL
+# (classification) layer keeps the bare name -- the historical fixed-3-op
+# plan -- while every intermediate layer of a deep stack gets an index
+# suffix ("ClassCaps-Routing[0]", ...) so repeated layers never collide
+# on a phase name.  ``execplan.FUSED_NAME`` aliases this constant.
+ROUTING_NAME = "ClassCaps-Routing"
+
+
+@dataclasses.dataclass(frozen=True)
+class CapsLayerSpec:
+    """One PLAIN routing-capsule layer of a deep stack: votes + routing
+    from however many capsules flow in to ``num_caps`` capsules of
+    ``caps_dim`` dimensions."""
+
+    num_caps: int
+    caps_dim: int
+    routing_iters: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ResCapsBlock:
+    """One REVERSIBLE residual capsule block (MoCapsNet-style).
+
+    The incoming capsule tensor ``[B, I, C]`` is split along the capsule
+    axis into ``x1 [B, I1, C]`` / ``x2 [B, I2, C]`` (``I1 = I // 2``) and
+    run through an additive coupling of two routing-capsule halves::
+
+        y1 = x1 + F(x2)        # F: routing layer  I2 caps -> I1 x C
+        y2 = x2 + G(y1)        # G: routing layer  I1 caps -> I2 x C
+
+    Shape-preserving AND invertible: ``x2 = y2 - G(y1)``, ``x1 = y1 -
+    F(x2)``, so the backward pass recomputes each block's input from its
+    output instead of saving activations -- activation memory stays flat
+    in depth no matter how many blocks are stacked.
+    """
+
+    routing_iters: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingLayer:
+    """One RESOLVED votes+routing instance of the layer graph.
+
+    ``CapsNetConfig.routing_stack()`` flattens the ``caps_layers`` entries
+    (a ``ResCapsBlock`` contributes its two coupling halves) plus the
+    implicit final ClassCaps layer into a chain of these; the plan
+    compiler, both forwards, ``init_params``, and the analysis profiles
+    all walk the same chain.  ``name`` is the plan-op / PMU-phase name
+    (unique per instance), ``param`` the ``params`` dict key.  ``half``
+    marks residual coupling halves (``"f"`` / ``"g"``); consecutive
+    residual blocks form one reversible segment in the backward pass.
+    """
+
+    name: str
+    param: str
+    in_caps: int
+    in_dim: int
+    num_caps: int
+    caps_dim: int
+    iters: int
+    block: int | None = None     # caps_layers entry index (residual only)
+    half: str | None = None      # "f" | "g" coupling half
+
+    @property
+    def jd(self) -> int:
+        return self.num_caps * self.caps_dim
+
+    @property
+    def residual(self) -> bool:
+        return self.half is not None
+
 
 @dataclasses.dataclass(frozen=True)
 class CapsNetConfig:
@@ -35,6 +106,11 @@ class CapsNetConfig:
     routing_iters: int = 3
     decoder_hidden: tuple[int, int] = (512, 1024)
     use_decoder: bool = True
+    # Intermediate routing layers between PrimaryCaps and the final
+    # ClassCaps layer: a chain of ``CapsLayerSpec`` / ``ResCapsBlock``
+    # entries.  Empty (the default) is the paper's fixed 3-op topology --
+    # plans, params, and outputs are bit-identical to the pre-graph code.
+    caps_layers: tuple = ()
 
     @property
     def conv1_out(self) -> int:
@@ -52,6 +128,50 @@ class CapsNetConfig:
     def pc_channels(self) -> int:
         return self.num_primary_groups * self.primary_dim
 
+    def routing_stack(self) -> tuple[RoutingLayer, ...]:
+        """Flatten ``caps_layers`` + the final ClassCaps layer into the
+        resolved routing-layer chain (see ``RoutingLayer``)."""
+        layers: list[RoutingLayer] = []
+        i, c = self.num_primary, self.primary_dim
+        idx = 0
+        for k, entry in enumerate(self.caps_layers):
+            if isinstance(entry, ResCapsBlock):
+                if i < 2:
+                    raise ValueError(
+                        f"caps_layers[{k}]: ResCapsBlock needs >= 2 incoming "
+                        f"capsules to split the coupling halves, got {i}")
+                i1, i2 = i // 2, i - i // 2
+                layers.append(RoutingLayer(
+                    name=f"{ROUTING_NAME}[{idx}]", param=f"cc{idx}_w",
+                    in_caps=i2, in_dim=c, num_caps=i1, caps_dim=c,
+                    iters=entry.routing_iters, block=k, half="f"))
+                idx += 1
+                layers.append(RoutingLayer(
+                    name=f"{ROUTING_NAME}[{idx}]", param=f"cc{idx}_w",
+                    in_caps=i1, in_dim=c, num_caps=i2, caps_dim=c,
+                    iters=entry.routing_iters, block=k, half="g"))
+                idx += 1
+            elif isinstance(entry, CapsLayerSpec):
+                if entry.num_caps < 1 or entry.caps_dim < 1:
+                    raise ValueError(
+                        f"caps_layers[{k}]: num_caps/caps_dim must be >= 1, "
+                        f"got {entry.num_caps}x{entry.caps_dim}")
+                layers.append(RoutingLayer(
+                    name=f"{ROUTING_NAME}[{idx}]", param=f"cc{idx}_w",
+                    in_caps=i, in_dim=c, num_caps=entry.num_caps,
+                    caps_dim=entry.caps_dim, iters=entry.routing_iters))
+                idx += 1
+                i, c = entry.num_caps, entry.caps_dim
+            else:
+                raise TypeError(
+                    f"caps_layers[{k}]: expected CapsLayerSpec or "
+                    f"ResCapsBlock, got {type(entry).__name__}")
+        layers.append(RoutingLayer(
+            name=ROUTING_NAME, param="cc_w", in_caps=i, in_dim=c,
+            num_caps=self.num_classes, caps_dim=self.class_dim,
+            iters=self.routing_iters))
+        return tuple(layers)
+
 
 Params = dict[str, Any]
 
@@ -60,6 +180,8 @@ def init_params(key: jax.Array, cfg: CapsNetConfig = CapsNetConfig(),
                 dtype=jnp.float32) -> Params:
     k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
     he = jax.nn.initializers.he_normal()
+    stack = cfg.routing_stack()
+    final = stack[-1]
     params: Params = {
         "conv1_w": he(k1, (cfg.conv1_kernel, cfg.conv1_kernel,
                            cfg.in_channels, cfg.conv1_channels), dtype),
@@ -67,11 +189,20 @@ def init_params(key: jax.Array, cfg: CapsNetConfig = CapsNetConfig(),
         "pc_w": he(k2, (cfg.pc_kernel, cfg.pc_kernel,
                         cfg.conv1_channels, cfg.pc_channels), dtype),
         "pc_b": jnp.zeros((cfg.pc_channels,), dtype),
-        # W[i, j, class_dim, primary_dim]
+        # W[i, j, class_dim, in_dim]: the final layer consumes whatever
+        # the stack flows into it (= num_primary x primary_dim when
+        # caps_layers is empty -- same shape, same key, same bits).
         "cc_w": 0.1 * jax.random.normal(
-            k3, (cfg.num_primary, cfg.num_classes, cfg.class_dim,
-                 cfg.primary_dim), dtype),
+            k3, (final.in_caps, final.num_caps, final.caps_dim,
+                 final.in_dim), dtype),
     }
+    # Intermediate routing layers of a deep stack.  Keys derive from k3
+    # via fold_in so the base 6-way split (and every existing param) stays
+    # bit-identical when caps_layers is empty.
+    for lay in stack[:-1]:
+        params[lay.param] = 0.1 * jax.random.normal(
+            jax.random.fold_in(k3, 1 + int(lay.param[2:-2])),
+            (lay.in_caps, lay.num_caps, lay.caps_dim, lay.in_dim), dtype)
     if cfg.use_decoder:
         d_in = cfg.num_classes * cfg.class_dim
         h1, h2 = cfg.decoder_hidden
@@ -114,6 +245,35 @@ def routing_by_agreement(u_hat: jax.Array, iters: int) -> jax.Array:
     b = jax.lax.fori_loop(0, iters, body, b0)
     c = jax.nn.softmax(b, axis=2)
     return squash(jnp.einsum("bij,bijd->bjd", c, u_hat))  # v[b, j, d]
+
+
+def routing_stack_ref(params: Params, u: jax.Array,
+                      cfg: CapsNetConfig) -> jax.Array:
+    """Reference (jnp) walk of the routing-layer graph: squashed primary
+    capsules ``u [B, I, C]`` -> class capsules ``[B, J, D]``.
+
+    Residual blocks apply the additive coupling ``y1 = x1 + F(x2)``,
+    ``y2 = x2 + G(y1)`` (see ``ResCapsBlock``); plain layers replace the
+    capsule tensor.  The default (empty-stack) config reduces to exactly
+    ``routing_by_agreement(compute_votes(u, cc_w), iters)``.
+    """
+    stack = cfg.routing_stack()
+    h, k = u, 0
+    while k < len(stack):
+        lay = stack[k]
+        if lay.half == "f":
+            g_lay = stack[k + 1]
+            x1, x2 = h[:, :lay.num_caps], h[:, lay.num_caps:]
+            y1 = x1 + routing_by_agreement(
+                compute_votes(x2, params[lay.param]), lay.iters)
+            y2 = x2 + routing_by_agreement(
+                compute_votes(y1, params[g_lay.param]), g_lay.iters)
+            h, k = jnp.concatenate([y1, y2], axis=1), k + 2
+        else:
+            h = routing_by_agreement(
+                compute_votes(h, params[lay.param]), lay.iters)
+            k += 1
+    return h
 
 
 def decode(params: Params, v: jax.Array,
@@ -171,15 +331,25 @@ def forward(params: Params, images: jax.Array,
         x = _kops.conv2d(images, params["conv1_w"], params["conv1_b"],
                          stride=1, plan_op=plan.op("Conv1"),
                          epilogue="relu", interpret=interpret)
-        pipelined = any(op.name == _execplan.PIPE_NAME for op in plan.ops)
-        w = params["cc_w"].reshape(
-            cfg.num_primary, cfg.num_classes * cfg.class_dim, cfg.primary_dim)
+        stack = cfg.routing_stack()
+
+        def w_of(lay):
+            return params[lay.param].reshape(lay.in_caps, lay.jd, lay.in_dim)
+
+        pipelined = any(op.kernel == "primary_routing" for op in plan.ops)
         if pipelined:
             # ONE pipelined megakernel: PrimaryCaps conv + squash + votes
-            # + routing, with the inter-layer u in VMEM scratch (neither
-            # u nor u_hat ever round-trips through HBM).
-            v = _kops.primary_routing(x, params["pc_w"], params["pc_b"], w,
-                                      plan=plan, interpret=interpret)
+            # + routing of the FIRST routing layer, with the inter-layer u
+            # in VMEM scratch (neither u nor u_hat ever round-trips
+            # through HBM).
+            first = stack[0]
+            h = _kops.primary_routing(
+                x, params["pc_w"], params["pc_b"], w_of(first), plan=plan,
+                iters=first.iters, num_classes=first.num_caps,
+                routing_op_name=first.name,
+                interpret=interpret).reshape(b, first.num_caps,
+                                             first.caps_dim)
+            k = 1
         else:
             pc = plan.op("PrimaryCaps")
             x = _kops.conv2d(x, params["pc_w"], params["pc_b"],
@@ -188,10 +358,30 @@ def forward(params: Params, images: jax.Array,
             u = x.reshape(b, cfg.num_primary, cfg.primary_dim)
             if not pc.fuses_squash:
                 u = _kops.squash(u, plan=plan, interpret=interpret)
-            # ONE fused megakernel: votes + all routing iterations on-chip
-            # (u_hat never round-trips through HBM).
-            v = _kops.votes_routing(u, w, plan=plan, interpret=interpret)
-        v = v.reshape(b, cfg.num_classes, cfg.class_dim)
+            h, k = u, 0
+        # Walk the remaining routing-layer graph: one fused votes+routing
+        # megakernel per plain layer (u_hat never round-trips through
+        # HBM), and one REVERSIBLE segment call per maximal run of
+        # residual blocks (backward reconstructs each block's input from
+        # its output -- no activations saved; see res_caps_segment).
+        while k < len(stack):
+            lay = stack[k]
+            if lay.half == "f":
+                pairs = []
+                while k < len(stack) and stack[k].half == "f":
+                    pairs.append((stack[k], stack[k + 1]))
+                    k += 2
+                ws = tuple(w_of(l) for pair in pairs for l in pair)
+                h = _kops.res_caps_segment(h, ws, tuple(pairs), plan=plan,
+                                           interpret=interpret)
+            else:
+                h = _kops.votes_routing(
+                    h, w_of(lay), plan=plan, op_name=lay.name,
+                    iters=lay.iters, num_classes=lay.num_caps,
+                    interpret=interpret).reshape(b, lay.num_caps,
+                                                 lay.caps_dim)
+                k += 1
+        v = h
     else:
         x = jax.lax.conv_general_dilated(
             images, params["conv1_w"], window_strides=(1, 1), padding="VALID",
@@ -202,8 +392,7 @@ def forward(params: Params, images: jax.Array,
             padding="VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
         x = x + params["pc_b"]
         u = squash(x.reshape(b, cfg.num_primary, cfg.primary_dim))
-        u_hat = compute_votes(u, params["cc_w"])
-        v = routing_by_agreement(u_hat, cfg.routing_iters)  # [B, J, D]
+        v = routing_stack_ref(params, u, cfg)              # [B, J, D]
     lengths = jnp.linalg.norm(v, axis=-1)                  # class scores
     out = {"class_caps": v, "lengths": lengths}
     if cfg.use_decoder and "dec_w1" in params:

@@ -217,6 +217,14 @@ def evaluate(org: MemoryOrg, profiles: Sequence[OperationProfile], *,
     one phase per dataflow operation; ``phase_durations`` carries the
     plan's per-phase cycle estimates (pass-count-aware for streamed
     fused schedules)."""
+    names = [op.name for op in profiles]
+    if len(set(names)) != len(names):
+        # Accesses and phase demands are keyed by profile name; a repeated
+        # routing layer must carry its per-instance suffix ("...[k]") or
+        # its instances would silently collapse into one phase here.
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate operation profile names {dupes}: "
+                         f"repeated layers need per-instance suffixes")
     dyn = {s.name: 0.0 for s in org.srams}
     per_op = {op.name: 0.0 for op in profiles}
 

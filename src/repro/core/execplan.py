@@ -175,6 +175,13 @@ class ExecutionPlan:
         return sum(op.hbm_bytes or 0.0 for op in self.ops
                    if not op.name.endswith(BWD_SUFFIX))
 
+    def activation_residency_bytes(self, *, reversible: bool = True) -> int:
+        """Routing-stack activation bytes a training step keeps live (see
+        the module-level ``activation_residency_bytes``) at this plan's
+        batch."""
+        return activation_residency_bytes(self.cfg, batch=self.batch,
+                                          reversible=reversible)
+
     def validate(self) -> None:
         """Check the plan invariants; raises ``PlanError`` on violation."""
         if self.batch < 1:
@@ -182,10 +189,12 @@ class ExecutionPlan:
         names = [op.name for op in self.ops]
         if len(set(names)) != len(names):
             raise PlanError(f"duplicate operation names: {names}")
+        stack = self.cfg.routing_stack()
         covered = [p.name for op in self.ops for p in op.profiles]
         expected = [p.name for p in
-                    analysis.capsnet_profiles(self.dataflow,
-                                              analysis.dims_from_config(self.cfg))]
+                    analysis.capsnet_stack_profiles(
+                        self.dataflow, analysis.dims_from_config(self.cfg),
+                        _layer_descs(stack))]
         if self.train:
             # Backward phases mirror the forward coverage in reverse
             # execution order (the order the backward actually runs).
@@ -207,7 +216,7 @@ class ExecutionPlan:
             if op.block is not None and op.block.vmem_total > self.vmem_budget:
                 raise PlanError(f"{op.name}: block tiles exceed VMEM budget")
             if op.block_i is not None and not (
-                    1 <= op.block_i <= max(self.cfg.num_primary, 1)):
+                    1 <= op.block_i <= max(max(l.in_caps for l in stack), 1)):
                 raise PlanError(f"{op.name}: block_i {op.block_i} out of range")
 
     def summary(self) -> list[dict]:
@@ -240,6 +249,47 @@ def _requirement(profile: OperationProfile) -> PhaseRequirement:
     return PhaseRequirement(name=profile.name,
                             required_bytes=profile.total_mem,
                             duration_cycles=profile.total_cycles)
+
+
+def _layer_descs(stack) -> tuple:
+    """``analysis.capsnet_stack_profiles`` layer descriptors for a
+    resolved routing stack (the per-layer profile-name suffix is the
+    instance name minus the shared ``FUSED_NAME`` base)."""
+    return tuple((lay.name[len(FUSED_NAME):], lay.in_caps, lay.in_dim,
+                  lay.num_caps, lay.caps_dim, lay.iters) for lay in stack)
+
+
+def activation_residency_bytes(cfg: CapsNetConfig, *, batch: int = 1,
+                               reversible: bool = True) -> int:
+    """Modeled bytes of ROUTING-STACK activations a training step must
+    keep live for the backward pass.
+
+    ``reversible=False`` is the conventional autodiff accounting: every
+    routing-layer instance saves its input capsule tensor
+    ``[B, in_caps, in_dim]``, so the total grows linearly in depth.
+    ``reversible=True`` is what the plan actually executes: a maximal run
+    of residual coupling halves forms ONE reversible segment that saves
+    only its OUTPUT (the backward re-derives every interior state by
+    inverting the additive couplings), so an all-residual stack costs one
+    segment tensor no matter how many blocks are stacked -- activation
+    memory flat in depth.  Plain (non-residual) layers still save their
+    input either way.
+    """
+    stack = cfg.routing_stack()
+    total, k = 0, 0
+    while k < len(stack):
+        lay = stack[k]
+        if reversible and lay.residual:
+            # x = [x1 | x2]: the F half consumes x2 and emits x1's width,
+            # so the segment tensor is (in_caps + num_caps) capsules.
+            seg_caps = lay.in_caps + lay.num_caps
+            total += batch * seg_caps * lay.in_dim * ELEM_BYTES
+            while k < len(stack) and stack[k].residual:
+                k += 1
+        else:
+            total += batch * lay.in_caps * lay.in_dim * ELEM_BYTES
+            k += 1
+    return total
 
 
 def _votes_vmem(batch: int, block_i: int, caps_dim: int, out_dim: int) -> int:
@@ -329,9 +379,22 @@ def _fused_streamed_vmem(batch: int, num_caps: int, block_i: int,
     return (u_res + logits + w_tile + uh_block + sv + out) * ELEM_BYTES
 
 
+def _fused_max_batch(num_caps: int, caps_dim: int, jd: int, j: int,
+                     vmem_budget: int, extra_per_batch: int = 0) -> int:
+    """Largest batch whose streamed block_i=1 forward footprint fits (the
+    footprint is affine in batch at fixed block_i; ``extra_per_batch``
+    carries a residual-epilogue operand's per-element bytes)."""
+    fixed = _fused_streamed_vmem(0, num_caps, 1, caps_dim, jd, j)
+    per = (_fused_streamed_vmem(1, num_caps, 1, caps_dim, jd, j) - fixed
+           + extra_per_batch)
+    return max((vmem_budget - fixed) // per, 0)
+
+
 def plan_votes_routing(num_caps: int, caps_dim: int, jd: int, j: int, *,
                        batch: int = 1, iters: int = 3,
-                       vmem_budget: int = VMEM_BYTES) -> VotesRoutingSchedule:
+                       vmem_budget: int = VMEM_BYTES,
+                       name: str = FUSED_NAME,
+                       residual: bool = False) -> VotesRoutingSchedule:
     """Resident-vs-streamed decision for the fused megakernel.
 
     Prefer **resident** (votes computed once into scratch, routing
@@ -345,31 +408,37 @@ def plan_votes_routing(num_caps: int, caps_dim: int, jd: int, j: int, *,
     s-pass/b-pass schedule's ``2*iters + 1``.  Raises ``PlanError`` only
     when even streamed ``block_i=1`` exceeds the budget -- the point
     where no schedule can keep the routing state on-chip at this batch.
+
+    ``name`` labels the layer instance in the error (deep stacks plan one
+    schedule per routing layer); ``residual`` adds the [B, J*D] residual
+    operand a coupling half's epilogue holds alongside the output.
     """
     wl = MatmulWorkload(m=num_caps, k=caps_dim, n=jd, in_bytes=ELEM_BYTES)
     # Tile-shape pick only (our per-mode footprint model is what is held
     # to the budget, not the generic double-buffered matmul model).
     bi0 = max(min(plan_matmul(wl).block_m, num_caps), 1)
+    extra = batch * jd * ELEM_BYTES if residual else 0
 
     bi = bi0
     while bi > 1 and _fused_resident_vmem(batch, num_caps, bi, caps_dim,
-                                          jd, j) > vmem_budget:
+                                          jd, j) + extra > vmem_budget:
         bi //= 2
-    need = _fused_resident_vmem(batch, num_caps, bi, caps_dim, jd, j)
+    need = _fused_resident_vmem(batch, num_caps, bi, caps_dim, jd, j) + extra
     if need <= vmem_budget:
         return VotesRoutingSchedule(mode="resident", block_i=bi,
                                     vmem_bytes=need, n_passes=1, workload=wl)
 
     bi = bi0
     while bi > 1 and _fused_streamed_vmem(batch, num_caps, bi, caps_dim,
-                                          jd, j) > vmem_budget:
+                                          jd, j) + extra > vmem_budget:
         bi //= 2
-    need = _fused_streamed_vmem(batch, num_caps, bi, caps_dim, jd, j)
+    need = _fused_streamed_vmem(batch, num_caps, bi, caps_dim, jd, j) + extra
     if need > vmem_budget:
         raise PlanError(
-            f"{FUSED_NAME}: no feasible schedule at batch={batch}: even "
+            f"{name}: no feasible schedule at batch={batch}: even "
             f"streamed block_i=1 needs {need} B of VMEM, over the "
-            f"{vmem_budget} B budget")
+            f"{vmem_budget} B budget; largest feasible batch is "
+            f"{_fused_max_batch(num_caps, caps_dim, jd, j, vmem_budget, jd * ELEM_BYTES if residual else 0)}")
     return VotesRoutingSchedule(mode="streamed", block_i=bi, vmem_bytes=need,
                                 n_passes=iters + 1, workload=wl)
 
@@ -554,22 +623,23 @@ def primary_intermediate_hbm_bytes(batch: int, num_caps: int,
     return float(2 * batch * num_caps * caps_dim * ELEM_BYTES)
 
 
-def _pipe_requirement(dims: CapsNetDims,
+def _pipe_requirement(in_caps: int, j: int, jd: int,
                       profs: Sequence[OperationProfile],
                       sched: PrimaryRoutingSchedule) -> PhaseRequirement:
     """ONE PMU phase for the pipelined pair, honest per mode: the produce
     phase's demand is the PrimaryCaps profile's; the consumer phases match
     ``_fused_requirement`` (with u's residency already counted -- it IS
     the produce scratch).  Duration is the four covered operations' sum
-    with the votes computation scaled by the W-pass count."""
+    with the votes computation scaled by the W-pass count.
+    ``in_caps``/``j``/``jd`` are the consumed routing layer's dimensions
+    (the FIRST layer of a deep stack)."""
     pc, cc, ss, us = profs
     duration = (pc.total_cycles + cc.total_cycles * sched.n_passes
                 + ss.total_cycles + us.total_cycles)
     if sched.mode == "resident":
         req = max(p.total_mem for p in profs)
     else:
-        bij = dims.num_primary * dims.num_classes
-        jd = dims.num_classes * dims.class_dim
+        bij = in_caps * j
         req = max(pc.total_mem,
                   cc.data_mem
                   + bij * (analysis.ACC_BYTES + analysis.ACT_BYTES)
@@ -637,8 +707,8 @@ def _fused_bwd_max_batch(num_caps: int, caps_dim: int, jd: int, j: int,
 
 def plan_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int, j: int, *,
                            batch: int = 1, iters: int = 3,
-                           vmem_budget: int = VMEM_BYTES
-                           ) -> VotesRoutingSchedule:
+                           vmem_budget: int = VMEM_BYTES,
+                           name: str = FUSED_NAME) -> VotesRoutingSchedule:
     """Resident-vs-streamed decision for the fused megakernel's BACKWARD.
 
     Chosen independently of the forward: the backward's scratch is larger
@@ -678,7 +748,7 @@ def plan_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int, j: int, *,
                                     iters)
     if need > vmem_budget:
         raise PlanError(
-            f"{FUSED_NAME}{BWD_SUFFIX}: no feasible backward schedule at "
+            f"{name}{BWD_SUFFIX}: no feasible backward schedule at "
             f"batch={batch}: even streamed block_i=1 needs {need} B of "
             f"VMEM, over the {vmem_budget} B budget; largest feasible "
             f"batch is "
@@ -728,12 +798,13 @@ def _conv_patch_vmem(in_hw: int, cin: int, k: int, out_hw: int) -> int:
     return image + patches
 
 
-def _fused_requirement(dims: CapsNetDims,
+def _fused_requirement(in_caps: int, j: int, jd: int,
                        profs: Sequence[OperationProfile],
-                       sched: VotesRoutingSchedule) -> PhaseRequirement:
-    """ONE PMU phase for the fused megakernel, honest per mode.
+                       sched: VotesRoutingSchedule,
+                       name: str = FUSED_NAME) -> PhaseRequirement:
+    """ONE PMU phase for one fused megakernel instance, honest per mode.
 
-    Resident keeps the ClassCaps votes in the accumulator memory across
+    Resident keeps the layer's votes in the accumulator memory across
     routing, so the phase demand is the peak of the three covered
     dataflow operations.  Streamed never materializes the votes: the
     demand is u + logits/couplings + the W prefetch buffer + the s/v
@@ -741,6 +812,8 @@ def _fused_requirement(dims: CapsNetDims,
     scales the votes computation by the schedule's W-pass count
     (``iters + 1`` fused passes recompute the votes each stream); the
     resident duration is the plain three-operation sum (one pass).
+    ``in_caps``/``j``/``jd`` are THIS layer instance's dimensions (a deep
+    stack plans one phase per layer), ``name`` its plan-op name.
     """
     cc, ss, us = profs
     duration = (cc.total_cycles * sched.n_passes
@@ -748,13 +821,12 @@ def _fused_requirement(dims: CapsNetDims,
     if sched.mode == "resident":
         req = max(cc.total_mem, ss.total_mem, us.total_mem)
     else:
-        bij = dims.num_primary * dims.num_classes
-        jd = dims.num_classes * dims.class_dim
+        bij = in_caps * j
         req = (cc.data_mem                                    # u resident
                + bij * (analysis.ACC_BYTES + analysis.ACT_BYTES)  # b + c
                + cc.weight_mem                                # W prefetch
                + 4 * jd * analysis.ACC_BYTES)                 # s/v temps
-    return PhaseRequirement(name=FUSED_NAME, required_bytes=req,
+    return PhaseRequirement(name=name, required_bytes=req,
                             duration_cycles=duration)
 
 
@@ -776,28 +848,30 @@ def _backward_profile(p: OperationProfile) -> OperationProfile:
         offchip_writes=2 * p.offchip_writes)
 
 
-def _fused_bwd_requirement(dims: CapsNetDims,
+def _fused_bwd_requirement(in_caps: int, j: int, jd: int, iters: int,
                            profs_bwd: Sequence[OperationProfile],
-                           sched: VotesRoutingSchedule) -> PhaseRequirement:
-    """ONE PMU phase for the fused backward, honest per mode (mirrors
-    ``_fused_requirement``: resident holds votes-sized state across the
-    replay, streamed holds u + the logits trajectory + small temps).  The
-    votes-recompute cycles (the ClassCaps-FC-bwd profile, whose 2x-forward
-    work matches resident's 2 W streams) scale with the schedule's W-pass
-    count: ``iters + 4`` streamed passes each rebuild one votes block."""
+                           sched: VotesRoutingSchedule,
+                           name: str = FUSED_NAME) -> PhaseRequirement:
+    """ONE PMU phase for one fused backward instance, honest per mode
+    (mirrors ``_fused_requirement``: resident holds votes-sized state
+    across the replay, streamed holds u + the logits trajectory + small
+    temps).  The votes-recompute cycles (the ClassCaps-FC-bwd profile,
+    whose 2x-forward work matches resident's 2 W streams) scale with the
+    schedule's W-pass count: ``iters + 4`` streamed passes each rebuild
+    one votes block.  Dimensions are per layer instance, like
+    ``_fused_requirement``'s."""
     duration = (sum(p.total_cycles for p in profs_bwd[:-1])
                 + profs_bwd[-1].total_cycles * sched.n_passes / 2)
     if sched.mode == "resident":
         req = max(p.total_mem for p in profs_bwd)
     else:
         cc = profs_bwd[-1]                       # ClassCaps-FC-bwd
-        bij = dims.num_primary * dims.num_classes
-        jd = dims.num_classes * dims.class_dim
+        bij = in_caps * j
         req = (cc.data_mem                                   # u resident
-               + (dims.routing_iters + 2) * bij * analysis.ACC_BYTES  # b_t, db
+               + (iters + 2) * bij * analysis.ACC_BYTES      # b_t, db
                + cc.weight_mem                               # W prefetch
                + 8 * jd * analysis.ACC_BYTES)                # s/ds/dv temps
-    return PhaseRequirement(name=FUSED_NAME + BWD_SUFFIX,
+    return PhaseRequirement(name=name + BWD_SUFFIX,
                             required_bytes=req, duration_cycles=duration)
 
 
@@ -848,7 +922,9 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
     Backward phases join ``phase_groups()`` so dse/pmu gate them too.
     """
     dims = analysis.dims_from_config(cfg)
-    profiles = analysis.capsnet_profiles(dataflow, dims)
+    stack = cfg.routing_stack()
+    profiles = analysis.capsnet_stack_profiles(dataflow, dims,
+                                               _layer_descs(stack))
     by_name = {p.name: p for p in profiles}
     ops: list[OpPlan] = []
 
@@ -904,28 +980,46 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
                     batch, dims.num_primary, dims.primary_dim))
         ops.append(op)
 
-    # ClassCaps head: ONE fused votes+routing megakernel.  The resident
-    # schedule is the split path minus the u_hat HBM round-trip; streamed
-    # recomputes the votes from re-streamed W tiles when they cannot fit.
-    fused_profs = tuple(by_name[n] for n in FUSED_COVERS)
-    jd = dims.num_classes * dims.class_dim
-    sched = plan_votes_routing(dims.num_primary, dims.primary_dim, jd,
-                               dims.num_classes, batch=batch,
-                               iters=dims.routing_iters,
-                               vmem_budget=vmem_budget)
-    votes_cycles = sched.workload.flops / (2 * MXU * MXU)
-    routing_cycles = sum(p.total_cycles for p in fused_profs[1:])
-    ops.append(OpPlan(
-        name=FUSED_NAME, kernel="votes_routing", workload=sched.workload,
-        block=None, block_i=sched.block_i, mode=sched.mode,
-        vmem_bytes=sched.vmem_bytes,
-        est_cycles=votes_cycles * sched.n_passes + routing_cycles,
-        hbm_bytes=votes_routing_hbm_bytes(batch, dims.num_primary,
-                                          dims.primary_dim, jd,
-                                          sched.n_passes),
-        uhat_hbm_bytes=0.0,
-        requirement=_fused_requirement(dims, fused_profs, sched),
-        profiles=fused_profs))
+    # Routing stack: ONE fused votes+routing megakernel per layer
+    # instance (the historical single-op ClassCaps head is the one-layer
+    # case).  Each layer runs its own resident-vs-streamed DSE at ITS
+    # dimensions -- a PlanError names the offending layer -- and residual
+    # coupling halves carry the [B, J*D] skip operand in their footprint
+    # and an extra skip read in their traffic.
+    layer_plans: list[tuple] = []
+    for pos, lay in enumerate(stack):
+        suffix = lay.name[len(FUSED_NAME):]
+        lay_profs = tuple(by_name[n + suffix] for n in FUSED_COVERS)
+        sched = plan_votes_routing(lay.in_caps, lay.in_dim, lay.jd,
+                                   lay.num_caps, batch=batch,
+                                   iters=lay.iters,
+                                   vmem_budget=vmem_budget,
+                                   name=lay.name, residual=lay.residual)
+        votes_cycles = sched.workload.flops / (2 * MXU * MXU)
+        routing_cycles = sum(p.total_cycles for p in lay_profs[1:])
+        hbm = votes_routing_hbm_bytes(batch, lay.in_caps, lay.in_dim,
+                                      lay.jd, sched.n_passes)
+        if lay.residual:
+            hbm += batch * lay.jd * ELEM_BYTES     # skip operand read
+        # An intermediate layer's output round-trips HBM to the next
+        # layer's kernel call; the FINAL layer's v is the network output.
+        inter = (primary_intermediate_hbm_bytes(batch, lay.num_caps,
+                                                lay.caps_dim)
+                 if pos + 1 < len(stack) else None)
+        ops.append(OpPlan(
+            name=lay.name, kernel="votes_routing", workload=sched.workload,
+            block=None, block_i=sched.block_i, mode=sched.mode,
+            vmem_bytes=sched.vmem_bytes,
+            est_cycles=votes_cycles * sched.n_passes + routing_cycles,
+            hbm_bytes=hbm,
+            uhat_hbm_bytes=0.0,
+            intermediate_hbm_bytes=inter,
+            requirement=_fused_requirement(lay.in_caps, lay.num_caps,
+                                           lay.jd, lay_profs, sched,
+                                           name=lay.name),
+            profiles=lay_profs))
+        layer_plans.append((lay, lay_profs, sched, votes_cycles,
+                            routing_cycles))
 
     # Pipelined producer->consumer pair: replace [PrimaryCaps, fused
     # megakernel] with ONE OpPlan whose kernel streams the conv's
@@ -934,33 +1028,43 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
     # when the combined footprint exceeds the budget (PlanError only
     # when neither fits -- the per-op planning already raised then).
     conv1_op, pc_op = ops[0], ops[1]
+    first, first_profs, _, first_votes, first_routing = layer_plans[0]
     pipe_sched = None
-    if pipeline:
+    if pipeline and not first.residual:
+        # The pipelined pair fuses PrimaryCaps with the FIRST routing
+        # layer (whatever its width); a residual first half cannot
+        # pipeline -- its kernel consumes a skip operand that does not
+        # exist until the producer has run.
         try:
             pipe_sched = plan_primary_routing(
                 dims.pc_out ** 2, dims.pc_k ** 2 * dims.pc_cin,
-                dims.pc_cout, dims.num_primary, dims.primary_dim, jd,
-                dims.num_classes, batch=batch, iters=dims.routing_iters,
+                dims.pc_cout, first.in_caps, first.in_dim, first.jd,
+                first.num_caps, batch=batch, iters=first.iters,
                 vmem_budget=vmem_budget)
         except PlanError:
             pipe_sched = None            # per-op pair is the fallback
     if pipe_sched is not None:
-        pipe_profs = (by_name["PrimaryCaps"],) + fused_profs
+        pipe_profs = (by_name["PrimaryCaps"],) + first_profs
         prod_cycles = pipe_sched.workload.flops / (2 * MXU * MXU)
         ops = [conv1_op, OpPlan(
             name=PIPE_NAME, kernel="primary_routing",
             workload=pipe_sched.workload, block=pipe_sched.block,
             block_i=pipe_sched.block_i, block_k=pipe_sched.block_k,
             mode=pipe_sched.mode, vmem_bytes=pipe_sched.vmem_bytes,
-            est_cycles=(prod_cycles + votes_cycles * pipe_sched.n_passes
-                        + routing_cycles),
+            est_cycles=(prod_cycles + first_votes * pipe_sched.n_passes
+                        + first_routing),
             hbm_bytes=primary_routing_hbm_bytes(
                 batch, dims.pc_out ** 2, dims.pc_k ** 2 * dims.pc_cin,
-                dims.pc_cout, dims.num_primary, dims.primary_dim, jd,
+                dims.pc_cout, first.in_caps, first.in_dim, first.jd,
                 pipe_sched.n_passes),
-            uhat_hbm_bytes=0.0, intermediate_hbm_bytes=0.0,
-            requirement=_pipe_requirement(dims, pipe_profs, pipe_sched),
-            profiles=pipe_profs)]
+            uhat_hbm_bytes=0.0,
+            intermediate_hbm_bytes=(
+                0.0 if len(stack) == 1 else
+                primary_intermediate_hbm_bytes(batch, first.num_caps,
+                                               first.caps_dim)),
+            requirement=_pipe_requirement(first.in_caps, first.num_caps,
+                                          first.jd, pipe_profs, pipe_sched),
+            profiles=pipe_profs)] + ops[3:]
 
     if train:
         # Backward OpPlans, reverse network order.  The fused backward
@@ -969,24 +1073,42 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
         # forward tiles for their two (three with the squash recompute)
         # blocked matmuls plus the col2im scatter, whose peak footprint
         # matches the forward's (the stages run sequentially).
-        bwd_sched = plan_votes_routing_bwd(
-            dims.num_primary, dims.primary_dim, jd, dims.num_classes,
-            batch=batch, iters=dims.routing_iters, vmem_budget=vmem_budget)
-        bwd_profs = tuple(_backward_profile(p)
-                          for p in reversed(fused_profs))
-        ops.append(OpPlan(
-            name=FUSED_NAME + BWD_SUFFIX, kernel="votes_routing_bwd",
-            workload=bwd_sched.workload, block=None,
-            block_i=bwd_sched.block_i, mode=bwd_sched.mode,
-            vmem_bytes=bwd_sched.vmem_bytes,
-            est_cycles=(votes_cycles * bwd_sched.n_passes
-                        + 2 * routing_cycles),
-            hbm_bytes=votes_routing_bwd_hbm_bytes(
-                batch, dims.num_primary, dims.primary_dim, jd,
-                mode=bwd_sched.mode, iters=dims.routing_iters),
-            uhat_hbm_bytes=0.0,
-            requirement=_fused_bwd_requirement(dims, bwd_profs, bwd_sched),
-            profiles=bwd_profs))
+        for lay, lay_profs, fwd_sched, votes_cycles, routing_cycles \
+                in reversed(layer_plans):
+            bwd_sched = plan_votes_routing_bwd(
+                lay.in_caps, lay.in_dim, lay.jd, lay.num_caps,
+                batch=batch, iters=lay.iters, vmem_budget=vmem_budget,
+                name=lay.name)
+            bwd_profs = tuple(_backward_profile(p)
+                              for p in reversed(lay_profs))
+            est = votes_cycles * bwd_sched.n_passes + 2 * routing_cycles
+            hbm = votes_routing_bwd_hbm_bytes(
+                batch, lay.in_caps, lay.in_dim, lay.jd,
+                mode=bwd_sched.mode, iters=lay.iters)
+            vmem = bwd_sched.vmem_bytes
+            if lay.residual:
+                # Reversible inversion (MoCapsNet-style): the backward
+                # first replays this coupling half FORWARD from the
+                # reconstructed segment state to invert the residual add,
+                # then runs the ordinary fused VJP -- the recompute cost
+                # of never saving the stack's activations.
+                est += votes_cycles * fwd_sched.n_passes + routing_cycles
+                hbm += votes_routing_hbm_bytes(
+                    batch, lay.in_caps, lay.in_dim, lay.jd,
+                    fwd_sched.n_passes)
+                vmem = max(vmem, fwd_sched.vmem_bytes)
+            ops.append(OpPlan(
+                name=lay.name + BWD_SUFFIX, kernel="votes_routing_bwd",
+                workload=bwd_sched.workload, block=None,
+                block_i=bwd_sched.block_i, mode=bwd_sched.mode,
+                vmem_bytes=vmem,
+                est_cycles=est,
+                hbm_bytes=hbm,
+                uhat_hbm_bytes=0.0,
+                requirement=_fused_bwd_requirement(
+                    lay.in_caps, lay.num_caps, lay.jd, lay.iters,
+                    bwd_profs, bwd_sched, name=lay.name),
+                profiles=bwd_profs))
         for fwd in (pc_op, conv1_op):           # PrimaryCaps, then Conv1
             wl = fwd.workload
             # + pre-act recompute: the squash backward replays the conv

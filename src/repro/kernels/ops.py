@@ -26,6 +26,8 @@ from repro.kernels.primary_routing import \
     primary_caps_routing as _primary_routing
 from repro.kernels.routing import routing as _routing
 from repro.kernels.squash import squash as _squash
+from repro.kernels.votes_routing import \
+    res_caps_segment as _res_caps_segment
 from repro.kernels.votes_routing import votes_routing as _votes_routing
 
 
@@ -137,13 +139,17 @@ def planned_votes_routing_bwd(num_caps: int, caps_dim: int, jd: int,
 
 
 def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
+                  op_name: str | None = None,
                   iters: int | None = None, num_classes: int | None = None,
                   mode: str | None = None, block_i: int | None = None,
                   bwd_mode: str | None = None, bwd_block_i: int | None = None,
                   interpret: bool = True) -> jax.Array:
     """u: [B, I, C], w: [I, J*D, C] -> v: [B, J*D]: fused votes + routing
     (u_hat never leaves the chip).  Schedule (``mode``/``block_i``) comes
-    from ``plan.op("ClassCaps-Routing")`` or the memoized plan decision.
+    from ``plan.op(op_name)`` -- default ``"ClassCaps-Routing"``, the
+    final classification layer; deep-stack callers pass the intermediate
+    layer's plan-op name (``"ClassCaps-Routing[0]"``, ...) -- or the
+    memoized plan decision.
 
     Differentiable: under ``jax.grad`` the backward schedule
     (``bwd_mode``/``bwd_block_i``) comes from the plan's backward op
@@ -151,6 +157,8 @@ def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
     plan decision at the plan's VMEM budget -- ``d u_hat`` stays on-chip
     either way.
     """
+    if op_name is None:
+        op_name = execplan.FUSED_NAME
     if iters is None:
         iters = plan.cfg.routing_iters if plan is not None else 3
     if num_classes is None:
@@ -164,7 +172,7 @@ def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
                 raise ValueError(
                     f"votes_routing: batch {u.shape[0]} exceeds the plan's "
                     f"batch {plan.batch}; recompile the plan for this batch")
-            op = plan.op(execplan.FUSED_NAME)
+            op = plan.op(op_name)
             mode = mode or op.mode
             block_i = block_i or op.block_i
         else:
@@ -177,7 +185,7 @@ def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
         budget = plan.vmem_budget if plan is not None else VMEM_BYTES
         bwd_op = None
         if plan is not None and plan.train:
-            bwd_op = plan.op(execplan.FUSED_NAME + execplan.BWD_SUFFIX)
+            bwd_op = plan.op(op_name + execplan.BWD_SUFFIX)
         if bwd_op is not None:
             bwd_mode = bwd_mode or bwd_op.mode
             bwd_block_i = bwd_block_i or bwd_op.block_i
@@ -225,6 +233,7 @@ def planned_primary_routing(p_pos: int, k_in: int, n_ch: int, num_caps: int,
 def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
                     w_cc: jax.Array, *, plan=None, stride: int | None = None,
                     iters: int | None = None, num_classes: int | None = None,
+                    routing_op_name: str | None = None,
                     mode: str | None = None, block_i: int | None = None,
                     block_k: int | None = None, bwd_mode: str | None = None,
                     bwd_block_i: int | None = None,
@@ -241,6 +250,8 @@ def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
     ``votes_routing``'s (the pipelined VJP composes the per-op backward
     kernels, so the plan's backward OpPlans apply unchanged).
     """
+    if routing_op_name is None:
+        routing_op_name = execplan.FUSED_NAME
     if stride is None:
         stride = plan.cfg.pc_stride if plan is not None else 2
     if iters is None:
@@ -276,7 +287,7 @@ def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
         budget = plan.vmem_budget if plan is not None else VMEM_BYTES
         bwd_op = None
         if plan is not None and plan.train:
-            bwd_op = plan.op(execplan.FUSED_NAME + execplan.BWD_SUFFIX)
+            bwd_op = plan.op(routing_op_name + execplan.BWD_SUFFIX)
         if bwd_op is not None:
             bwd_mode = bwd_mode or bwd_op.mode
             bwd_block_i = bwd_block_i or bwd_op.block_i
@@ -304,6 +315,62 @@ def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
         interpret=interpret)
 
 
+def _layer_schedule(lay, batch: int, plan) -> tuple[int, int, str, int,
+                                                    str, int]:
+    """Resolve one routing layer's (iters, j, mode, block_i, bwd_mode,
+    bwd_block_i) kernel statics from the plan's per-layer OpPlans (or the
+    memoized plan decision), with the same backward-fallback semantics as
+    ``votes_routing``."""
+    if plan is not None:
+        op = plan.op(lay.name)
+        mode, block_i = op.mode, op.block_i
+    else:
+        mode, block_i = planned_votes_routing(
+            lay.in_caps, lay.in_dim, lay.jd, lay.num_caps, lay.iters, batch)
+    budget = plan.vmem_budget if plan is not None else VMEM_BYTES
+    if plan is not None and plan.train:
+        bwd_op = plan.op(lay.name + execplan.BWD_SUFFIX)
+        bwd_mode, bwd_block_i = bwd_op.mode, bwd_op.block_i
+    else:
+        try:
+            bwd_mode, bwd_block_i = planned_votes_routing_bwd(
+                lay.in_caps, lay.in_dim, lay.jd, lay.num_caps, lay.iters,
+                batch, budget)
+        except execplan.PlanError as err:
+            _warn_bwd_fallback_once(
+                f"res_caps_segment[{lay.name}]: no feasible backward "
+                f"schedule under the {budget} B VMEM budget ({err}); "
+                f"differentiating this call will reuse the forward "
+                f"schedule (mode={mode!r}, block_i={block_i}) with a "
+                f"backward VMEM footprint the plan never validated")
+            bwd_mode, bwd_block_i = mode, block_i
+    return (lay.iters, lay.num_caps, mode, block_i, bwd_mode, bwd_block_i)
+
+
+def res_caps_segment(x: jax.Array, ws, pairs, *, plan=None,
+                     interpret: bool = True) -> jax.Array:
+    """Reversible residual capsule segment: x [B, I, C] through a maximal
+    run of ``ResCapsBlock`` coupling pairs -> [B, I, C].
+
+    ``pairs`` is a tuple of ``(f_layer, g_layer)`` ``RoutingLayer`` pairs
+    (from ``CapsNetConfig.routing_stack()``); ``ws`` the matching flat
+    per-half weights ``[in_caps, jd, in_dim]``.  Each half runs the fused
+    votes+routing megakernel with a residual-add epilogue, scheduled by
+    its own plan op.  Differentiable with NO saved activations: the
+    backward inverts the coupling block-by-block from the segment output
+    (see ``kernels.votes_routing._res_segment_bwd``).
+    """
+    if plan is not None and x.shape[0] > plan.batch:
+        raise ValueError(
+            f"res_caps_segment: batch {x.shape[0]} exceeds the plan's "
+            f"batch {plan.batch}; recompile the plan for this batch")
+    blocks = tuple(
+        (lf.num_caps, _layer_schedule(lf, x.shape[0], plan),
+         _layer_schedule(lg, x.shape[0], plan)) for lf, lg in pairs)
+    return _res_caps_segment(x, tuple(ws), blocks=blocks,
+                             interpret=interpret)
+
+
 def squash(x: jax.Array, *, plan=None, block_rows: int | None = None,
            interpret: bool = True) -> jax.Array:
     if block_rows is None:
@@ -327,7 +394,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
 
 
 __all__ = ["conv2d", "caps_votes", "routing", "votes_routing",
-           "primary_routing", "squash", "rmsnorm", "flash_attention",
+           "primary_routing", "res_caps_segment", "squash", "rmsnorm",
+           "flash_attention",
            "planned_block_i", "planned_conv_blocks",
            "planned_votes_routing", "planned_votes_routing_bwd",
            "planned_primary_routing", "ref"]

@@ -116,8 +116,11 @@ def _routing_iterations(uh4, iters: int):
     return squash(jnp.einsum("bij,bijd->bjd", c, uh4))  # [B, J, D]
 
 
-def _resident_kernel(u_ref, w_ref, o_ref, votes_scr, *, iters: int, j: int,
-                     d: int, n_blocks: int, block_i: int):
+def _resident_kernel(u_ref, w_ref, *refs, iters: int, j: int,
+                     d: int, n_blocks: int, block_i: int,
+                     residual: bool = False):
+    r_ref = refs[0] if residual else None   # residual-add epilogue operand
+    o_ref, votes_scr = refs[-2], refs[-1]
     ib = pl.program_id(0)
     votes_scr[:, pl.ds(ib * block_i, block_i), :] = _votes_block(
         u_ref[...], w_ref[...])
@@ -127,12 +130,15 @@ def _resident_kernel(u_ref, w_ref, o_ref, votes_scr, *, iters: int, j: int,
         bsz, i_pad, jd = votes_scr.shape
         v = _routing_iterations(votes_scr[...].reshape(bsz, i_pad, j, d),
                                 iters)
-        o_ref[...] = v.reshape(bsz, j * d).astype(o_ref.dtype)
+        out = v.reshape(bsz, j * d)
+        if residual:
+            out = out + r_ref[...].astype(jnp.float32)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
-def _streamed_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *, iters: int,
+def _streamed_kernel(u_ref, w_ref, *refs, iters: int,
                      j: int, d: int, n_blocks: int, block_i: int,
-                     n_passes: int):
+                     n_passes: int, residual: bool = False):
     """Fused s+b pass: iteration ``t`` streams ``W`` exactly once.
 
     Before accumulating ``s_t`` from the recomputed votes block, the same
@@ -143,6 +149,8 @@ def _streamed_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *, iters: int,
     is the final readout.
     """
     del iters  # folded into n_passes = iters + 1
+    r_ref = refs[0] if residual else None   # residual-add epilogue operand
+    o_ref, b_scr, s_scr, v_scr = refs[-4], refs[-3], refs[-2], refs[-1]
     t = pl.program_id(0)
     ib = pl.program_id(1)
     rows = pl.ds(ib * block_i, block_i)
@@ -172,17 +180,23 @@ def _streamed_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *, iters: int,
 
         @pl.when(t == n_passes - 1)
         def _():
-            o_ref[...] = v_scr[...].astype(o_ref.dtype)
+            out = v_scr[...]
+            if residual:       # epilogue only: v_scr itself stays pure v
+                out = out + r_ref[...].astype(jnp.float32)
+            o_ref[...] = out.astype(o_ref.dtype)
 
 
-def _streamed_2pass_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *,
+def _streamed_2pass_kernel(u_ref, w_ref, *refs,
                            iters: int, j: int, d: int, n_blocks: int,
-                           block_i: int, n_passes: int):
+                           block_i: int, n_passes: int,
+                           residual: bool = False):
     """Unfused streamed schedule (``mode="streamed-2pass"``): one s-pass
     plus one b-pass per iteration, ``W`` re-read ``2*iters + 1`` times.
     Never plan-chosen -- kept as the oracle the fused pass is tested
     against."""
     del iters  # folded into n_passes = 2*iters + 1
+    r_ref = refs[0] if residual else None   # residual-add epilogue operand
+    o_ref, b_scr, s_scr, v_scr = refs[-4], refs[-3], refs[-2], refs[-1]
     p = pl.program_id(0)
     ib = pl.program_id(1)
     row0 = ib * block_i
@@ -210,7 +224,10 @@ def _streamed_2pass_kernel(u_ref, w_ref, o_ref, b_scr, s_scr, v_scr, *,
 
             @pl.when(p == n_passes - 1)
             def _():
-                o_ref[...] = v_scr[...].astype(o_ref.dtype)
+                out = v_scr[...]
+                if residual:   # epilogue only: v_scr itself stays pure v
+                    out = out + r_ref[...].astype(jnp.float32)
+                o_ref[...] = out.astype(o_ref.dtype)
 
     @pl.when(p % 2 == 1)
     def _():  # b-pass: logits update from the recomputed votes + resident v
@@ -491,30 +508,38 @@ def _padded(u, w, block_i: int):
     return u, w, n_blocks, i_pad                               # count rows
 
 
-def _vr_apply(st: _VRStatics, u, w):
+def _vr_apply(st: _VRStatics, u, w, r=None):
+    """Forward dispatch.  ``r [B, J*D]`` (optional) is a residual added to
+    the routed output just before the store -- the ResCapsBlock coupling
+    epilogue; it rides the kernel's output block, never a separate pass."""
     bsz, i_dim, c = u.shape
     _, jd, _ = w.shape
     j = st.num_classes
     d = jd // j
     u, w, n_blocks, i_pad = _padded(u, w, st.block_i)
     out_shape = jax.ShapeDtypeStruct((bsz, jd), u.dtype)
+    residual = r is not None
+    operands = (u, w, r) if residual else (u, w)
 
     if st.mode == "resident":
         kernel = functools.partial(_resident_kernel, iters=st.iters, j=j,
                                    d=d, n_blocks=n_blocks,
-                                   block_i=st.block_i)
+                                   block_i=st.block_i, residual=residual)
+        in_specs = [
+            pl.BlockSpec((bsz, st.block_i, c), lambda ib: (0, ib, 0)),
+            pl.BlockSpec((st.block_i, jd, c), lambda ib: (ib, 0, 0)),
+        ]
+        if residual:
+            in_specs.append(pl.BlockSpec((bsz, jd), lambda ib: (0, 0)))
         return pl.pallas_call(
             kernel,
             grid=(n_blocks,),
-            in_specs=[
-                pl.BlockSpec((bsz, st.block_i, c), lambda ib: (0, ib, 0)),
-                pl.BlockSpec((st.block_i, jd, c), lambda ib: (ib, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bsz, jd), lambda ib: (0, 0)),
             out_shape=out_shape,
             scratch_shapes=[pltpu.VMEM((bsz, i_pad, jd), jnp.float32)],
             interpret=st.interpret,
-        )(u, w)
+        )(*operands)
 
     if st.mode == ORACLE_MODE:          # unfused oracle: s+b passes split
         n_passes = 2 * st.iters + 1
@@ -524,16 +549,19 @@ def _vr_apply(st: _VRStatics, u, w):
         body = _streamed_kernel
     kernel = functools.partial(body, iters=st.iters, j=j, d=d,
                                n_blocks=n_blocks, block_i=st.block_i,
-                               n_passes=n_passes)
+                               n_passes=n_passes, residual=residual)
+    in_specs = [
+        # u: constant index map -> fetched once, resident for the run
+        pl.BlockSpec((bsz, i_pad, c), lambda p, ib: (0, 0, 0)),
+        # W: re-streamed every pass (the votes are recomputed on-chip)
+        pl.BlockSpec((st.block_i, jd, c), lambda p, ib: (ib, 0, 0)),
+    ]
+    if residual:
+        in_specs.append(pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)))
     return pl.pallas_call(
         kernel,
         grid=(n_passes, n_blocks),
-        in_specs=[
-            # u: constant index map -> fetched once, resident for the run
-            pl.BlockSpec((bsz, i_pad, c), lambda p, ib: (0, 0, 0)),
-            # W: re-streamed every pass (the votes are recomputed on-chip)
-            pl.BlockSpec((st.block_i, jd, c), lambda p, ib: (ib, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)),
         out_shape=out_shape,
         scratch_shapes=[
@@ -542,7 +570,7 @@ def _vr_apply(st: _VRStatics, u, w):
             pltpu.VMEM((bsz, jd), jnp.float32),         # squashed v
         ],
         interpret=st.interpret,
-    )(u, w)
+    )(*operands)
 
 
 def _vr_grad(st: _VRStatics, u, w, g):
@@ -622,6 +650,150 @@ def _vr_core_bwd(st: _VRStatics, res, g):
 
 
 _vr_core.defvjp(_vr_core_fwd, _vr_core_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _vr_core_res(st: _VRStatics, u, w, r):
+    """Fused votes + routing + residual-add epilogue: ``r [B, J*D]`` is
+    added to the routed output inside the kernel (one coupling half of a
+    ResCapsBlock).  The add is linear, so the backward is exactly
+    ``_vr_grad`` plus a pass-through cotangent for ``r``."""
+    return _vr_apply(st, u, w, r)
+
+
+def _vr_core_res_fwd(st: _VRStatics, u, w, r):
+    return _vr_apply(st, u, w, r), (u, w)
+
+
+def _vr_core_res_bwd(st: _VRStatics, res, g):
+    u, w = res
+    du, dw = _vr_grad(st, u, w, g)
+    return du, dw, g
+
+
+_vr_core_res.defvjp(_vr_core_res_fwd, _vr_core_res_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Reversible residual capsule segment (MoCapsNet-style ResCapsBlocks)
+# ---------------------------------------------------------------------------
+
+def _res_segment_run(blocks, x, ws):
+    """Forward walk of a run of additive-coupling blocks: for each block
+    ``(i1, st_f, st_g)`` split the capsule axis at ``i1`` and apply
+    ``y1 = x1 + F(x2)``, ``y2 = x2 + G(y1)`` -- each half one fused
+    votes+routing kernel with the residual-add epilogue."""
+    h = x
+    for k, (i1, st_f, st_g) in enumerate(blocks):
+        bsz = h.shape[0]
+        x1, x2 = h[:, :i1], h[:, i1:]
+        y1 = _vr_core_res(st_f, x2, ws[2 * k],
+                          x1.reshape(bsz, -1)).reshape(x1.shape)
+        y2 = _vr_core_res(st_g, y1, ws[2 * k + 1],
+                          x2.reshape(bsz, -1)).reshape(x2.shape)
+        h = jnp.concatenate([y1, y2], axis=1)
+    return h
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _res_segment(blocks, x, ws):
+    return _res_segment_run(blocks, x, ws)
+
+
+def _res_segment_fwd(blocks, x, ws):
+    # REVERSIBLE: only the segment OUTPUT and the weights are saved --
+    # never x or any per-block intermediate -- so activation residency
+    # stays flat no matter how many blocks the segment chains.
+    y = _res_segment_run(blocks, x, ws)
+    return y, (y, ws)
+
+
+def _res_segment_bwd(blocks, res, g):
+    """Invert the coupling block-by-block from the segment output.
+
+    For each block (last first): recompute ``G(y1)`` / ``F(x2)`` forward
+    (capturing their VJPs) to reconstruct ``x2 = y2 - G(y1)``, ``x1 = y1
+    - F(x2)``, then push the cotangents through the coupling::
+
+        d y1_total = g1 + dG/dy1^T g2
+        d x1       = d y1_total
+        d x2       = g2 + dF/dx2^T d y1_total
+
+    Each half costs one forward + one backward kernel call -- the same
+    recompute-from-(u, W) idiom as ``_vr_core_bwd``, lifted to block
+    granularity."""
+    y, ws = res
+    dws = [None] * len(ws)
+    for k in range(len(blocks) - 1, -1, -1):
+        i1, st_f, st_g = blocks[k]
+        wf, wg = ws[2 * k], ws[2 * k + 1]
+        y1, y2 = y[:, :i1], y[:, i1:]
+        g1, g2 = g[:, :i1], g[:, i1:]
+        gy1, vjp_g = jax.vjp(
+            lambda a, w: _vr_core(st_g, a, w).reshape(y2.shape), y1, wg)
+        x2 = y2 - gy1
+        fx2, vjp_f = jax.vjp(
+            lambda a, w: _vr_core(st_f, a, w).reshape(y1.shape), x2, wf)
+        x1 = y1 - fx2
+        dy1_g, dwg = vjp_g(g2)
+        g1_tot = g1 + dy1_g
+        dx2_f, dwf = vjp_f(g1_tot)
+        g = jnp.concatenate([g1_tot, g2 + dx2_f], axis=1)
+        y = jnp.concatenate([x1, x2], axis=1)
+        dws[2 * k], dws[2 * k + 1] = dwf, dwg
+    return g, tuple(dws)
+
+
+_res_segment.defvjp(_res_segment_fwd, _res_segment_bwd)
+
+
+def _seg_statics(stat, i_dim: int, interpret: bool) -> _VRStatics:
+    iters, j, mode, block_i, bwd_mode, bwd_block_i = stat
+    if mode not in ALL_MODES or bwd_mode not in ALL_MODES:
+        raise ValueError(f"unknown mode {mode!r}/{bwd_mode!r}; "
+                         f"choose from {ALL_MODES}")
+    return _VRStatics(iters=iters, num_classes=j, mode=mode,
+                      block_i=max(1, min(block_i, i_dim)),
+                      bwd_mode=bwd_mode,
+                      bwd_block_i=max(1, min(bwd_block_i, i_dim)),
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def res_caps_segment(x: jax.Array, ws, *, blocks,
+                     interpret: bool = True) -> jax.Array:
+    """x: [B, I, C] through a run of reversible ResCapsBlocks -> [B, I, C].
+
+    ``blocks`` is a tuple of ``(i1, stats_f, stats_g)`` per block, where
+    ``i1`` is the coupling split point and each ``stats`` is the half's
+    ``(iters, num_out_caps, mode, block_i, bwd_mode, bwd_block_i)``
+    schedule (from its plan op; see ``repro.kernels.ops`` for the
+    plan-aware wrapper).  ``ws`` are the flat per-half weights, F then G
+    per block: ``wf [I-i1, i1*C, C]``, ``wg [i1, (I-i1)*C, C]``.
+
+    Differentiable with NO saved activations: ``jax.grad`` reconstructs
+    each block's input from its output (additive coupling is invertible)
+    and replays the halves' fused backward kernels.
+    """
+    bsz, i_dim, c = x.shape
+    if len(ws) != 2 * len(blocks):
+        raise ValueError(f"res_caps_segment: {len(blocks)} blocks need "
+                         f"{2 * len(blocks)} half-weights, got {len(ws)}")
+    resolved = []
+    for n, (i1, sf, sg) in enumerate(blocks):
+        i2 = i_dim - i1
+        if not 1 <= i1 < i_dim:
+            raise ValueError(f"res_caps_segment: block {n} split i1={i1} "
+                             f"outside [1, {i_dim - 1}]")
+        wf, wg = ws[2 * n], ws[2 * n + 1]
+        if wf.shape != (i2, i1 * c, c) or wg.shape != (i1, i2 * c, c):
+            raise ValueError(
+                f"res_caps_segment: block {n} weight shapes {wf.shape}/"
+                f"{wg.shape} do not match the i1={i1} coupling of "
+                f"[{bsz}, {i_dim}, {c}]")
+        resolved.append((i1, _seg_statics(sf, i2, interpret),
+                         _seg_statics(sg, i1, interpret)))
+    return _res_segment(tuple(resolved), x, tuple(ws))
 
 
 @functools.partial(jax.jit, static_argnames=(

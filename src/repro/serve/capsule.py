@@ -9,10 +9,13 @@ compiled once and amortized across the request stream.  Inactive slots
 carry zero images -- the capsule head is per-sample, so padding never
 perturbs active requests.
 
-On the pallas backend the engine compiles the FUSED plan: the ClassCaps
-head is one ``votes_routing`` megakernel (resident or streamed schedule
-per the plan's VMEM decision), so no slot tick ever round-trips the votes
-tensor through HBM.  A caller-supplied plan must be compiled for
+On the pallas backend the engine compiles the FUSED plan: every routing
+layer of the config's graph (the single ClassCaps head, or a deep
+ResCaps stack's per-layer instances) is one ``votes_routing`` megakernel
+(resident or streamed schedule per the plan's VMEM decision), so no slot
+tick ever round-trips a votes tensor through HBM.  The engine is
+graph-agnostic -- it serves whatever stack ``compile_plan`` scheduled
+for the config.  A caller-supplied plan must be compiled for
 ``batch >= slots``: the jitted forward always runs all slot rows, so a
 smaller plan batch would blow the plan's validated VMEM footprint (or
 raise the opaque kernel-level batch error on the first tick) --

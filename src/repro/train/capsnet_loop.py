@@ -142,7 +142,8 @@ class CapsTrainLoop(FaultTolerantLoop):
 
     def _batch(self, step: int) -> dict:
         return mnist_batch(self.data_cfg, step,
-                           image_hw=self.cfg.image_hw)
+                           image_hw=self.cfg.image_hw,
+                           channels=self.cfg.in_channels)
 
     def _run_step(self, state: dict, batch) -> tuple[dict, dict]:
         if "opt" in state:
@@ -176,6 +177,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--backend", choices=("jnp", "pallas"),
                     default="pallas")
     ap.add_argument("--config", choices=sorted(CONFIGS), default="smoke")
+    ap.add_argument("--arch", default=None,
+                    help="registry architecture id (e.g. capsnet_mnist, "
+                         "capsnet_cifar10, capsnet_svhn); overrides "
+                         "--config.  Deep-stack archs train through the "
+                         "per-layer graph plan + reversible backward.")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --arch: use the arch's smoke_config() "
+                         "(toy widths, same topology)")
     ap.add_argument("--ckpt-dir", default="caps_checkpoints")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--no-resume", action="store_true")
@@ -184,7 +193,16 @@ def main(argv: list[str] | None = None) -> int:
                          "NaN-guard rollback fired (the CI smoke gate)")
     args = ap.parse_args(argv)
 
-    loop = CapsTrainLoop(CONFIGS[args.config], CapsLoopConfig(
+    if args.arch is not None:
+        from repro.configs import registry
+        cfg = (registry.get_smoke_config(args.arch) if args.smoke
+               else registry.get_config(args.arch))
+        if not isinstance(cfg, CapsNetConfig):
+            ap.error(f"--arch {args.arch} is not a CapsuleNet workload "
+                     f"(CapsuleNet archs: {registry.CAPSNET_ARCHS})")
+    else:
+        cfg = CONFIGS[args.config]
+    loop = CapsTrainLoop(cfg, CapsLoopConfig(
         total_steps=args.steps, batch=args.batch, lr=args.lr,
         optimizer=args.optimizer, ckpt_every=args.ckpt_every,
         ckpt_dir=args.ckpt_dir, backend=args.backend))

@@ -65,8 +65,11 @@ def frames_batch(cfg: DataConfig, step: int, host: int = 0,
 
 
 def mnist_batch(cfg: DataConfig, step: int, host: int = 0,
-                num_hosts: int = 1, image_hw: int = 28) -> dict:
-    """Synthetic MNIST-like digits: class-dependent blobs, 10 classes."""
+                num_hosts: int = 1, image_hw: int = 28,
+                channels: int = 1) -> dict:
+    """Synthetic MNIST-like digits: class-dependent blobs, 10 classes.
+    ``channels > 1`` (CIFAR/SVHN-geometry CapsuleNet configs) tints the
+    blob per channel so color carries class signal too."""
     b = cfg.global_batch // num_hosts
     key = _fold(cfg.seed, step, host)
     k1, k2 = jax.random.split(key)
@@ -81,6 +84,10 @@ def mnist_batch(cfg: DataConfig, step: int, host: int = 0,
                      / (2 * sigma[:, None, None] ** 2)))
     noise = 0.08 * jax.random.uniform(k2, (b, image_hw, image_hw))
     img = jnp.clip(blob + noise, 0.0, 1.0)[..., None]
+    if channels > 1:
+        tint = 0.5 + 0.5 * jnp.cos(
+            labels[:, None] * (1.0 + jnp.arange(channels)))
+        img = img * tint[:, None, None, :]
     return {"images": img.astype(jnp.float32),
             "labels": labels.astype(jnp.int32)}
 

@@ -1,0 +1,264 @@
+"""Deep routing-capsule stacks: the layer-graph plan compiler.
+
+Property tests over random 1-4-block stacks (ragged / non-power-of-two
+capsule counts): pallas-vs-jnp forward parity, gradient parity through
+the REVERSIBLE backward (which recomputes each residual block's input
+from its output instead of saving activations), per-layer ``PlanError``s
+naming the offending layer instance and the largest feasible batch,
+per-instance PMU phase naming for repeated layers, and the
+flat-in-depth activation-residency model.  The empty-stack (MNIST)
+config must compile to the SAME plan as the historical fixed-3-op
+pipeline -- schedules and outputs bit-identical.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analysis, capsnet, dse, execplan, pmu
+from repro.core.capsnet import (CapsLayerSpec, CapsNetConfig, ResCapsBlock,
+                                routing_stack_ref)
+from repro.core.execplan import (BWD_SUFFIX, FUSED_NAME, PlanError,
+                                 activation_residency_bytes, compile_plan)
+
+KEY = jax.random.PRNGKey(0)
+TOL = 1e-5
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_jit_caches():
+    # This module jits many large interpret-mode stacks; drop the traced/
+    # compiled executables afterwards so the full-suite process does not
+    # carry the accumulated allocator state into the LM compile tests.
+    yield
+    jax.clear_caches()
+
+# Odd image -> pc grid 4x4; groups=3 gives 48 primary capsules (ragged
+# against every power-of-two i-tile the planner prefers).
+BASE = dict(image_hw=14, conv1_channels=16, conv1_kernel=5, pc_kernel=3,
+            num_primary_groups=3, primary_dim=4, class_dim=8,
+            use_decoder=False)
+
+
+def _data(cfg, batch=1):
+    params = capsnet.init_params(KEY, cfg)
+    imgs = jax.random.uniform(KEY, (batch, cfg.image_hw, cfg.image_hw,
+                                    cfg.in_channels))
+    labels = jax.random.randint(KEY, (batch,), 0, cfg.num_classes)
+    return params, imgs, labels
+
+
+# ---------------------------------------------------------------------------
+# Stack resolution / parameter shapes
+# ---------------------------------------------------------------------------
+
+def test_empty_stack_is_single_classcaps_layer():
+    stack = CapsNetConfig(**BASE).routing_stack()
+    assert len(stack) == 1
+    (lay,) = stack
+    assert lay.name == FUSED_NAME and lay.param == "cc_w"
+    assert not lay.residual
+
+
+def test_rescaps_block_halves_split_the_capsule_axis():
+    cfg = CapsNetConfig(**BASE, caps_layers=(ResCapsBlock(),))
+    f, g, final = cfg.routing_stack()
+    assert (f.half, g.half) == ("f", "g")
+    # 48 capsules -> uneven-safe split 24/24; F consumes x2, emits x1
+    assert f.in_caps + f.num_caps == cfg.num_primary
+    assert g.in_caps == f.num_caps and g.num_caps == f.in_caps
+    assert final.in_caps == cfg.num_primary
+    params = capsnet.init_params(KEY, cfg)
+    assert params["cc0_w"].shape == (f.in_caps, f.num_caps, f.caps_dim,
+                                     f.in_dim)
+    assert params["cc_w"].shape == (final.in_caps, final.num_caps,
+                                    final.caps_dim, final.in_dim)
+
+
+def test_plain_layer_rewires_final_weight_shape():
+    cfg = CapsNetConfig(**BASE, caps_layers=(CapsLayerSpec(10, 6),))
+    params = capsnet.init_params(KEY, cfg)
+    assert params["cc0_w"].shape == (cfg.num_primary, 10, 6,
+                                     cfg.primary_dim)
+    assert params["cc_w"].shape == (10, cfg.num_classes, cfg.class_dim, 6)
+
+
+def test_bad_stack_entries_raise():
+    with pytest.raises(TypeError, match="caps_layers\\[0\\]"):
+        CapsNetConfig(**BASE, caps_layers=("nope",)).routing_stack()
+    with pytest.raises(ValueError, match="caps_layers\\[1\\]"):
+        CapsNetConfig(**BASE, caps_layers=(
+            CapsLayerSpec(1, 4), ResCapsBlock())).routing_stack()
+
+
+# ---------------------------------------------------------------------------
+# MNIST (empty stack) unchanged: same plan, same outputs
+# ---------------------------------------------------------------------------
+
+def test_mnist_plan_schedules_unchanged_by_graph_compiler():
+    """The one-layer case must reduce to the historical fixed pipeline:
+    same op names, same fused schedule, same profile coverage."""
+    plan = compile_plan(CapsNetConfig(), batch=4, train=True)
+    assert [op.name for op in plan.ops] == [
+        "Conv1", "PrimaryCaps", FUSED_NAME,
+        FUSED_NAME + BWD_SUFFIX, "PrimaryCaps" + BWD_SUFFIX,
+        "Conv1" + BWD_SUFFIX]
+    want = [p.name for p in analysis.capsnet_profiles()]
+    assert [p.name for p in plan.profiles][:5] == want
+
+
+def test_stack_profiles_single_layer_matches_fixed_model():
+    assert (analysis.capsnet_stack_profiles()
+            == analysis.capsnet_profiles())
+
+
+# ---------------------------------------------------------------------------
+# Property: random 1-4-block stacks, ragged dims -- forward + grad parity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(num_blocks=st.integers(min_value=1, max_value=4),
+       groups=st.sampled_from([3, 4]),
+       lead=st.sampled_from([None, (14, 6), (11, 4)]))
+def test_stack_forward_and_grad_parity(num_blocks, groups, lead):
+    """pallas == jnp through arbitrary residual stacks; the gradient runs
+    the reversible segment VJP (inputs recomputed, not saved)."""
+    layers = (() if lead is None else (CapsLayerSpec(*lead),)) \
+        + (ResCapsBlock(routing_iters=2),) * num_blocks
+    cfg = CapsNetConfig(**{**BASE, "num_primary_groups": groups},
+                        caps_layers=layers)
+    params, imgs, labels = _data(cfg, batch=2)
+
+    want = capsnet.forward(params, imgs, cfg)
+    plan = compile_plan(cfg, batch=2)
+    got = capsnet.forward(params, imgs, cfg, backend="pallas", plan=plan)
+    np.testing.assert_allclose(np.asarray(got["lengths"]),
+                               np.asarray(want["lengths"]),
+                               rtol=TOL, atol=TOL)
+
+    tplan = compile_plan(cfg, batch=2, train=True)
+    gp = jax.grad(lambda p: capsnet.total_loss(
+        p, imgs, labels, cfg, backend="pallas", plan=tplan)[0])(params)
+    gj = jax.grad(lambda p: capsnet.total_loss(
+        p, imgs, labels, cfg)[0])(params)
+    for k in gj:
+        ref = np.asarray(gj[k])
+        scale = max(np.abs(ref).max(), 1e-3)
+        np.testing.assert_allclose(np.asarray(gp[k]) / scale, ref / scale,
+                                   rtol=TOL, atol=TOL, err_msg=k)
+
+
+def test_pipelined_deep_stack_matches_reference():
+    """A plain first layer keeps the PrimaryCaps pipeline eligible; a
+    residual first half silently falls back to the per-op pair."""
+    cfg = CapsNetConfig(**BASE, caps_layers=(CapsLayerSpec(14, 6),
+                                             ResCapsBlock()))
+    params, imgs, _ = _data(cfg, batch=2)
+    pplan = compile_plan(cfg, batch=2, pipeline=True)
+    assert pplan.ops[1].name == execplan.PIPE_NAME
+    want = capsnet.forward(params, imgs, cfg)
+    got = capsnet.forward(params, imgs, cfg, backend="pallas", plan=pplan)
+    np.testing.assert_allclose(np.asarray(got["lengths"]),
+                               np.asarray(want["lengths"]),
+                               rtol=TOL, atol=TOL)
+
+    res_first = CapsNetConfig(**BASE, caps_layers=(ResCapsBlock(),))
+    rplan = compile_plan(res_first, batch=2, pipeline=True)
+    assert [op.name for op in rplan.ops][:2] == ["Conv1", "PrimaryCaps"]
+
+
+def test_routing_stack_ref_reduces_to_plain_routing():
+    cfg = CapsNetConfig(**BASE)
+    params = capsnet.init_params(KEY, cfg)
+    u = jax.random.normal(KEY, (2, cfg.num_primary, cfg.primary_dim))
+    want = capsnet.routing_by_agreement(
+        capsnet.compute_votes(u, params["cc_w"]), cfg.routing_iters)
+    np.testing.assert_allclose(np.asarray(routing_stack_ref(params, u, cfg)),
+                               np.asarray(want), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Property: per-layer PlanError naming + largest feasible batch
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(width=st.integers(min_value=500, max_value=900))
+def test_plan_error_names_failing_layer_and_feasible_batch(width):
+    """A stack whose INTERMEDIATE layer blows the budget fails with that
+    layer's instance name (not the final ClassCaps layer's) and reports
+    the largest batch its streamed floor could serve."""
+    cfg = CapsNetConfig(**BASE, caps_layers=(CapsLayerSpec(width, 8),))
+    budget = 300_000
+    with pytest.raises(PlanError) as exc:
+        compile_plan(cfg, batch=256, vmem_budget=budget)
+    msg = str(exc.value)
+    # the failing instance is the layer FED BY the wide one: [0] consumes
+    # 48 capsules cheaply; the final layer consumes `width` capsules --
+    # whichever raised must name itself and the feasible batch.
+    assert msg.startswith(f"{FUSED_NAME}") and "batch=256" in msg
+    assert "largest feasible batch is" in msg
+    n = int(msg.rsplit("largest feasible batch is", 1)[1].split()[0])
+    assert 0 <= n < 256
+    if n > 0:
+        compile_plan(cfg, batch=n, vmem_budget=budget)   # boundary plans
+
+
+def test_plan_error_names_intermediate_instance():
+    """Force the INTERMEDIATE instance itself to be the infeasible one:
+    its huge fan-in makes layer [0] the first to blow the budget."""
+    cfg = CapsNetConfig(**{**BASE, "num_primary_groups": 64},
+                        caps_layers=(CapsLayerSpec(8, 4),))
+    with pytest.raises(PlanError, match=rf"{FUSED_NAME}\[0\]"):
+        compile_plan(cfg, batch=512, vmem_budget=250_000)
+
+
+# ---------------------------------------------------------------------------
+# Per-instance phases: pmu / dse gate repeated layers separately
+# ---------------------------------------------------------------------------
+
+def test_phase_groups_suffix_repeated_layers():
+    cfg = CapsNetConfig(**BASE, caps_layers=(ResCapsBlock(),))
+    plan = compile_plan(cfg, batch=1, train=True)
+    names = [g[0] for g in plan.phase_groups()]
+    assert len(set(names)) == len(names)
+    assert f"{FUSED_NAME}[0]" in names and f"{FUSED_NAME}[1]" in names
+    assert f"{FUSED_NAME}[1]{BWD_SUFFIX}" in names
+    covered = [p for _, ps in plan.phase_groups() for p in ps]
+    assert len(set(covered)) == len(covered)     # no collapsed profiles
+    # the PMU schedule carries one gating phase per layer instance
+    mem = pmu.SRAMConfig(name="accum", capacity_bytes=1 << 20, ports=1,
+                         sectors_per_bank=8)
+    sched = pmu.schedule_from_plan(mem, plan)
+    assert [ph.name for ph in sched.phases] == names
+
+
+def test_dse_rejects_colliding_profile_names():
+    profiles = analysis.capsnet_profiles()
+    org = dse.design_organizations(profiles)["PG-SMP"]
+    with pytest.raises(ValueError, match="duplicate operation profile"):
+        dse.evaluate(org, [profiles[2], profiles[2]])
+
+
+def test_dse_scores_deep_stack_plan():
+    cfg = CapsNetConfig(**BASE, caps_layers=(ResCapsBlock(),))
+    plan = compile_plan(cfg, batch=1)
+    best = dse.best_design(plan=plan)
+    assert best.total_mj > 0
+
+
+# ---------------------------------------------------------------------------
+# Reversible activation residency: flat in depth
+# ---------------------------------------------------------------------------
+
+def test_activation_residency_flat_in_depth():
+    base = CapsNetConfig(**BASE, caps_layers=(ResCapsBlock(),))
+    rev1 = activation_residency_bytes(base, batch=4)
+    for n in (2, 4, 8):
+        cfg = CapsNetConfig(**BASE, caps_layers=(ResCapsBlock(),) * n)
+        assert activation_residency_bytes(cfg, batch=4) == rev1
+        saved = activation_residency_bytes(cfg, batch=4, reversible=False)
+        assert saved > rev1            # linear-in-depth baseline grows
+    plan = compile_plan(base, batch=4, train=True)
+    assert plan.activation_residency_bytes() == rev1
