@@ -241,6 +241,27 @@ def main() -> None:
                 "max_latency_ms", "occupancy"):
         row(f"capsule-serving/{key}", 0.0, f"{s[key]}")
 
+    # Degraded-mode throughput next to the healthy row: a mid-run
+    # vmem_shrink makes the engine swap in the degrade_plan schedule
+    # (shrunk tiles / streamed routing), so the delta IS the price of
+    # serving through a gated-down VMEM budget.  Trajectory row, no gate.
+    deg = CapsuleEngine(params, CFG, slots=BATCH, backend="pallas")
+    for i in range(REQUESTS):
+        deg.submit(CapsRequest(rid=i, image=pool[i % BATCH]))
+    from repro.core import faults
+    with faults.inject(faults.FaultSpec(site=faults.SITE_ENGINE_TICK,
+                                        kind="vmem_shrink", at=1, times=1,
+                                        factor=0.012)):
+        deg.run()
+    d = deg.stats()
+    row("capsule-serving-degraded",
+        1e6 * d["elapsed_s"] / max(d["requests"], 1),
+        f"req/s={d['requests_per_s']:.1f} replans={d['replans']} "
+        f"degraded={d['degraded']} vmem_budget={d['vmem_budget']} "
+        f"ok={d['ok']}/{d['submitted']}", gate=False)
+    row("capsule-serving-degraded/requests_per_s", 0.0,
+        f"{d['requests_per_s']}")
+
 
 if __name__ == "__main__":
     main()

@@ -8,7 +8,9 @@
 - ``planner``:  the TPU adaptation -- CapStore DSE over Pallas block shapes.
 - ``execplan``: ONE compiled per-operation plan (blocks + VMEM footprints +
   PMU phases) shared by the kernels, the energy model, and serving.
+- ``faults``:   deterministic fault injection (chaos tests drive the
+  serving/training graceful-degradation paths through it).
 """
 
 from repro.core import (analysis, capsnet, dse, energy, execplan,  # noqa: F401
-                        planner, pmu)
+                        faults, planner, pmu)

@@ -1134,6 +1134,140 @@ def compile_plan(cfg: CapsNetConfig = CapsNetConfig(), *, batch: int = 1,
     return plan
 
 
+# ---------------------------------------------------------------------------
+# Graceful degradation: replanning under a REDUCED VMEM budget
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DegradeReport:
+    """What ``degrade_plan`` gave up to fit the reduced budget.
+
+    ``concessions`` is human-readable, one entry per fallback rung taken
+    relative to the full-budget plan: the pipelined pair dissolving to
+    per-op, a layer flipping resident -> streamed, a shrunk ``block_i`` /
+    ``block_k`` / conv tile, and finally a reduced batch.  Empty means
+    the degraded budget still admits the exact full-budget schedule.
+    """
+
+    vmem_budget: int
+    requested_batch: int
+    batch: int
+    concessions: tuple[str, ...]
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.concessions)
+
+
+def _feasible_batch(cfg: CapsNetConfig, vmem_budget: int,
+                    train: bool) -> int:
+    """Largest batch the fused-schedule footprint models admit under
+    ``vmem_budget`` (the binding constraint in practice; the conv ops'
+    tiles shrink independently).  Train plans also bound by the backward
+    footprint -- it is larger, so it usually decides."""
+    best = None
+    for lay in cfg.routing_stack():
+        extra = lay.jd * ELEM_BYTES if lay.residual else 0
+        b = _fused_max_batch(lay.in_caps, lay.in_dim, lay.jd, lay.num_caps,
+                             vmem_budget, extra)
+        if train:
+            b = min(b, _fused_bwd_max_batch(lay.in_caps, lay.in_dim, lay.jd,
+                                            lay.num_caps, lay.iters,
+                                            vmem_budget))
+        best = b if best is None else min(best, b)
+    return best or 0
+
+
+def _plan_concessions(baseline: ExecutionPlan,
+                      plan: ExecutionPlan) -> tuple[str, ...]:
+    """Human-readable diff of what ``plan`` gave up vs ``baseline``."""
+    notes: list[str] = []
+    if plan.batch < baseline.batch:
+        notes.append(f"batch {baseline.batch} -> {plan.batch}")
+    base_names = {op.name for op in baseline.ops}
+    plan_names = {op.name for op in plan.ops}
+    if PIPE_NAME in base_names and PIPE_NAME not in plan_names:
+        notes.append(f"pipelined {PIPE_NAME} pair -> per-op "
+                     f"(inter-layer u round-trips HBM again)")
+    base_ops = {op.name: op for op in baseline.ops}
+    for op in plan.ops:
+        base = base_ops.get(op.name)
+        if base is None:
+            continue
+        if base.mode != op.mode and op.mode is not None:
+            notes.append(f"{op.name}: {base.mode} -> {op.mode}")
+        if (base.block_i is not None and op.block_i is not None
+                and op.block_i < base.block_i):
+            notes.append(f"{op.name}: block_i {base.block_i} "
+                         f"-> {op.block_i}")
+        if (base.block_k is not None and op.block_k is not None
+                and op.block_k < base.block_k):
+            notes.append(f"{op.name}: block_k {base.block_k} "
+                         f"-> {op.block_k}")
+        if (base.block is not None and op.block is not None
+                and (op.block.block_m, op.block.block_k, op.block.block_n)
+                != (base.block.block_m, base.block.block_k,
+                    base.block.block_n)):
+            notes.append(
+                f"{op.name}: conv tiles "
+                f"({base.block.block_m},{base.block.block_k},"
+                f"{base.block.block_n}) -> ({op.block.block_m},"
+                f"{op.block.block_k},{op.block.block_n})")
+    return tuple(notes)
+
+
+def degrade_plan(cfg: CapsNetConfig = CapsNetConfig(),
+                 vmem_budget: int = VMEM_BYTES, *, batch: int = 1,
+                 train: bool = False, pipeline: bool = False,
+                 min_batch: int = 1
+                 ) -> tuple[ExecutionPlan, DegradeReport]:
+    """Replan ``cfg`` under a (possibly reduced) ``vmem_budget``,
+    reporting what was given up relative to the full-budget plan.
+
+    This is the runtime's graceful-degradation chain -- the DESCNet-style
+    degraded-scratchpad operating points taken online.  ``compile_plan``
+    already embodies most of the ladder (pipelined pair -> per-op pair,
+    resident -> streamed, shrinking ``block_i``/``block_k``/conv tiles),
+    so the walk here is: recompile at the reduced budget, and when even
+    streamed ``block_i=1`` cannot fit the batch, drop to the largest
+    feasible batch (``_fused_max_batch`` bound, halving as a safety net
+    when a non-routing constraint binds instead) down to ``min_batch``.
+
+    At the FULL budget the returned plan is bit-identical to
+    ``compile_plan(cfg, batch=batch, ...)`` -- the memoized plan object
+    itself -- and the report carries zero concessions: with no fault
+    there is no behavior change.  Raises ``PlanError`` when no batch
+    ``>= min_batch`` fits (callers with a fixed slot batch pass
+    ``min_batch=slots`` and treat the raise as "fall back to the
+    reference backend").
+    """
+    if min_batch < 1 or min_batch > batch:
+        raise PlanError(f"min_batch must be in [1, batch={batch}], "
+                        f"got {min_batch}")
+    baseline = compile_plan(cfg, batch=batch, train=train,
+                            pipeline=pipeline)
+    b, last_err = batch, None
+    while b >= min_batch:
+        try:
+            plan = compile_plan(cfg, batch=b, vmem_budget=vmem_budget,
+                                train=train, pipeline=pipeline)
+            return plan, DegradeReport(
+                vmem_budget=vmem_budget, requested_batch=batch, batch=b,
+                concessions=_plan_concessions(baseline, plan))
+        except ValueError as err:        # PlanError, or the conv planner's
+            last_err = err               # bare no-block-fits ValueError
+            feas = _feasible_batch(cfg, vmem_budget, train)
+            # Jump straight to the model's feasible batch when it is the
+            # binding constraint; halve as the safety net when it is not
+            # (a conv tiling bound, say).  Always strictly decrease.
+            nxt = max(min(feas, b - 1), b // 2)
+            b = nxt if nxt < b else b - 1
+    raise PlanError(
+        f"degrade_plan: no feasible plan for batch >= {min_batch} under "
+        f"the degraded {vmem_budget} B VMEM budget "
+        f"(requested batch {batch}): {last_err}")
+
+
 def plan_table(plans: Sequence[tuple[str, ExecutionPlan]]) -> list[dict]:
     """Flat summary rows for benchmarks/examples."""
     rows = []

@@ -15,7 +15,7 @@ import warnings
 
 import jax
 
-from repro.core import execplan
+from repro.core import execplan, faults
 from repro.core.planner import VMEM_BYTES, MatmulWorkload, plan_matmul
 from repro.kernels import ref
 from repro.kernels.caps_votes import caps_votes as _caps_votes
@@ -62,9 +62,12 @@ def conv2d(x, w, b, *, stride: int = 1, plan_op=None, epilogue: str = "none",
         ow = (x.shape[2] - kw) // stride + 1
         bm, bk, bn = planned_conv_blocks(x.shape[0] * oh * ow,
                                          kh * kw * cin, cout)
-    return _conv2d(x, w, b, stride=stride, block_m=bm, block_k=bk,
-                   block_n=bn, epilogue=epilogue, squash_dim=squash_dim,
-                   interpret=interpret)
+    out = _conv2d(x, w, b, stride=stride, block_m=bm, block_k=bk,
+                  block_n=bn, epilogue=epilogue, squash_dim=squash_dim,
+                  interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_CONV2D, out)
+    return out
 
 
 @functools.lru_cache(maxsize=64)                    # bounded: was unbounded
@@ -210,9 +213,12 @@ def votes_routing(u: jax.Array, w: jax.Array, *, plan=None,
                 pbmode, pbbi = mode, block_i
             bwd_mode = bwd_mode or pbmode
             bwd_block_i = bwd_block_i or pbbi
-    return _votes_routing(u, w, iters=iters, num_classes=num_classes,
-                          mode=mode, block_i=block_i, bwd_mode=bwd_mode,
-                          bwd_block_i=bwd_block_i, interpret=interpret)
+    out = _votes_routing(u, w, iters=iters, num_classes=num_classes,
+                         mode=mode, block_i=block_i, bwd_mode=bwd_mode,
+                         bwd_block_i=bwd_block_i, interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_VOTES_ROUTING, out)
+    return out
 
 
 @functools.lru_cache(maxsize=64)
@@ -307,12 +313,15 @@ def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
                 pbmode, pbbi = mode, block_i
             bwd_mode = bwd_mode or pbmode
             bwd_block_i = bwd_block_i or pbbi
-    return _primary_routing(
+    out = _primary_routing(
         x, w_pc, b_pc, w_cc, stride=stride, iters=iters,
         num_classes=num_classes, mode=mode, block_i=block_i,
         block_k=block_k, bwd_mode=bwd_mode, bwd_block_i=bwd_block_i,
         conv_block_m=cb[0], conv_block_k=cb[1], conv_block_n=cb[2],
         interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_PRIMARY_ROUTING, out)
+    return out
 
 
 def _layer_schedule(lay, batch: int, plan) -> tuple[int, int, str, int,

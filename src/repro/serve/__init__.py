@@ -1,2 +1,3 @@
-from repro.serve.capsule import CapsRequest, CapsuleEngine  # noqa: F401
+from repro.serve.capsule import (CapsRequest, CapsuleEngine,  # noqa: F401
+                                 EngineStalled)
 from repro.serve.engine import Request, ServeEngine  # noqa: F401

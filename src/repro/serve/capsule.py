@@ -31,6 +31,44 @@ forward traces exactly once no matter how occupancy varies tick to tick
 (the old eager ``jnp.take`` compiled a fresh gather per distinct
 occupancy count).
 
+**Graceful degradation.**  The engine is hardened against the failure
+modes the chaos suite (``tests/test_faults.py``, ``core/faults.py``)
+injects; with injection disabled none of these paths add a trace or
+change a result:
+
+* Every request reaches exactly ONE terminal ``status``: ``ok`` /
+  ``timeout`` (its ``deadline_s`` expired in queue or in a slot) /
+  ``error`` (non-finite output survived ``max_retries``) / ``shed``
+  (bounded-queue admission or an unservable drain).  ``stats()``
+  counters satisfy ``ok + timeout + error + shed == submitted``.
+* **Bounded queue**: ``max_queue`` caps the backlog; ``admission``
+  picks who pays -- ``"reject"`` sheds the NEW request, ``"shed-oldest"``
+  sheds the head of the queue.  Shedding is a terminal status, never a
+  raise: the caller reads it off the request.
+* **Non-finite guard**: a slot row whose lengths come back NaN/Inf is
+  retried with per-retry tick backoff (the clean host-side image is
+  re-uploaded, healing device-side corruption); after ``max_retries``
+  the request errors out, and ``quarantine_after`` consecutive poisoned
+  results quarantine the SLOT (never admitted again) -- a storm cannot
+  grind the engine through one bad lane forever.  When every slot is
+  quarantined the remaining queue is shed rather than hung.
+* **Circuit breaker**: ``breaker_after`` consecutive forward-dispatch
+  exceptions re-trace the forward on the jnp reference backend and keep
+  serving with ``degraded=True`` -- one failing Pallas lowering does not
+  take the service down.
+* **Degraded-VMEM replanning**: a ``vmem_shrink(factor)`` fault (sector
+  power-gating, co-tenancy) makes the engine call
+  ``execplan.degrade_plan`` at the next tick boundary and swap in the
+  reduced-budget plan -- ONE new trace, the device slot batch preserved
+  -- walking compile_plan's own fallback ladder (pipelined pair ->
+  per-op, resident -> streamed, shrunk tiles); if not even a degraded
+  plan fits the slot batch, the breaker path serves on the reference
+  backend instead.
+* **Stall detection**: ``run(max_ticks=...)`` bounds the host loop, and
+  ``stall_ticks`` consecutive ticks without a single terminal event
+  while work is pending raise ``EngineStalled`` instead of spinning
+  forever.
+
 Per-request latency (submit -> classified) and engine throughput
 (requests/s) are reported by ``stats()``; tests validate slot-batched
 outputs against the direct single-request forward.
@@ -46,18 +84,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import capsnet
+from repro.core import capsnet, execplan, faults
 from repro.core.capsnet import CapsNetConfig
 from repro.core.execplan import ExecutionPlan, PlanError, compile_plan
+from repro.core.planner import VMEM_BYTES
+
+TERMINAL_STATUSES = ("ok", "timeout", "error", "shed")
+
+
+class EngineStalled(RuntimeError):
+    """``CapsuleEngine.run`` detected zero progress (or exhausted
+    ``max_ticks``) with work still pending -- raised instead of hanging
+    the host loop."""
 
 
 @dataclasses.dataclass
 class CapsRequest:
     rid: int
     image: np.ndarray                  # [H, W, C] float in [0, 1]
+    deadline_s: float | None = None    # submit-relative expiry (None: never)
     submitted_s: float | None = None
     finished_s: float | None = None
     queue_ticks: int = 0               # ticks spent waiting for a slot
+    retries: int = 0                   # non-finite-output retries consumed
+    status: str = "pending"            # -> ok | timeout | error | shed
     lengths: np.ndarray | None = None  # [num_classes] capsule lengths
     pred: int | None = None
 
@@ -73,7 +123,14 @@ class CapsuleEngine:
 
     def __init__(self, params, cfg: CapsNetConfig = CapsNetConfig(), *,
                  slots: int = 8, backend: str = "jnp",
-                 interpret: bool = True, plan: ExecutionPlan | None = None):
+                 interpret: bool = True, plan: ExecutionPlan | None = None,
+                 max_queue: int | None = None, admission: str = "reject",
+                 max_retries: int = 2, retry_backoff_ticks: int = 1,
+                 quarantine_after: int = 3, breaker_after: int = 3,
+                 stall_ticks: int = 32):
+        if admission not in ("reject", "shed-oldest"):
+            raise ValueError(f"unknown admission policy {admission!r} "
+                             f"(choices: 'reject', 'shed-oldest')")
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -92,37 +149,76 @@ class CapsuleEngine:
                 f"{slots} slots: every tick runs the full {slots}-row slot "
                 f"batch; compile the plan with batch >= slots")
         self.plan = plan          # None on the jnp path unless caller-supplied
+        self.max_queue = max_queue
+        self.admission = admission
+        self.max_retries = max_retries
+        self.retry_backoff_ticks = retry_backoff_ticks
+        self.quarantine_after = quarantine_after
+        self.breaker_after = breaker_after
+        self.stall_ticks = stall_ticks
+        self.degraded = False            # breaker tripped or plan degraded
+        self.degrade_report = None       # execplan.DegradeReport after replan
+        self.quarantined: set[int] = set()
         self.active: list[CapsRequest | None] = [None] * slots
         self.queue: deque[CapsRequest] = deque()
         self.finished: list[CapsRequest] = []
         self.ticks = 0
+        self._backend = backend
+        self._interpret = interpret
         self._occupancy = 0
         self._started_s: float | None = None
         self._stopped_s: float | None = None
+        self._vmem_budget = (plan.vmem_budget if plan is not None
+                             else VMEM_BYTES)
+        self._orig_budget = self._vmem_budget
+        self._counters = {s: 0 for s in TERMINAL_STATUSES}
+        self._counters.update(submitted=0, retries=0, replans=0,
+                              breaker_trips=0, forward_failures=0,
+                              poisoned=0)
+        self._poison_streak = [0] * slots   # consecutive bad results / slot
+        self._backoff_until = [0] * slots   # tick a retrying slot resumes at
+        self._breaker_fails = 0             # consecutive dispatch exceptions
+        self._stall_pending = False         # injected stall: skip one tick
         self._batch = np.zeros(
             (slots, cfg.image_hw, cfg.image_hw, cfg.in_channels), np.float32)
         self._batch_dev = jnp.asarray(self._batch)   # device-resident slots
         self._dirty: set[int] = set()                # slots to re-upload
         self._forward_traces = 0                     # (re)compilations seen
+        self._forward = self._make_forward(backend, plan)
+        self._scatter = jax.jit(lambda b, i, x: b.at[i].set(x))
 
+    def _make_forward(self, backend: str, plan: ExecutionPlan | None):
+        """One jitted forward over the full slot batch.  Rebuilt (ONE new
+        trace) only when the engine degrades: a vmem_shrink replan swaps
+        in the reduced-budget plan, a tripped breaker swaps in the jnp
+        reference backend."""
         def fwd(p, images, idx):
             self._forward_traces += 1                # counts traces, not calls
-            out = capsnet.forward(p, images, cfg, backend=backend,
-                                  plan=self.plan, interpret=interpret)
+            out = capsnet.forward(p, images, self.cfg, backend=backend,
+                                  plan=plan, interpret=self._interpret)
             # Gather the active slots ON DEVICE through the fixed-size
             # padded index and classify there: one trace for any
             # occupancy, and only slot-count-many result rows ever cross.
             lengths = jnp.take(out["lengths"], idx, axis=0)
             return lengths, jnp.argmax(lengths, axis=-1)
 
-        self._forward = jax.jit(fwd)
-        self._scatter = jax.jit(lambda b, i, x: b.at[i].set(x))
+        return jax.jit(fwd)
 
     # -- admission -------------------------------------------------------
+    def _finish(self, req: CapsRequest, status: str) -> None:
+        """Assign the terminal ``status`` and retire the request; every
+        submitted request passes through here exactly once."""
+        req.status = status
+        req.finished_s = time.perf_counter()
+        self.finished.append(req)
+        self._counters[status] += 1
+
     def submit(self, req: CapsRequest) -> None:
         """Queue ``req``; rejects images whose layout does not match the
         engine input (a same-size [C, H, W] array would otherwise be
-        silently reinterpreted as [H, W, C] garbage)."""
+        silently reinterpreted as [H, W, C] garbage).  A full bounded
+        queue sheds per the admission policy -- a terminal ``"shed"``
+        status on the victim, never a raise."""
         img = np.asarray(req.image, np.float32)
         want = self._batch.shape[1:]
         if img.shape != want:
@@ -133,15 +229,29 @@ class CapsuleEngine:
                 f"in_channels={self.cfg.in_channels}); refusing to reshape")
         req.image = img
         req.submitted_s = time.perf_counter()
+        self._counters["submitted"] += 1
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.admission == "reject":
+                self._finish(req, "shed")            # the newcomer pays
+                return
+            self._finish(self.queue.popleft(), "shed")   # the oldest pays
         self.queue.append(req)
 
     def _admit(self) -> None:
         for s in range(self.slots):
+            if s in self.quarantined:
+                continue
             if self.active[s] is None and self.queue:
                 req = self.queue.popleft()
                 self._batch[s] = req.image        # shape-checked in submit()
                 self._dirty.add(s)
                 self.active[s] = req
+
+    def _clear_slot(self, s: int) -> None:
+        self.active[s] = None
+        self._batch[s] = 0.0
+        self._dirty.add(s)          # freed slot returns to zero images
+        self._backoff_until[s] = 0
 
     def _upload_dirty(self) -> None:
         """Scatter only the slots dirtied since the last tick into the
@@ -157,15 +267,121 @@ class CapsuleEngine:
         self._batch_dev = self._scatter(self._batch_dev, jnp.asarray(idx),
                                         jnp.asarray(self._batch[idx]))
 
-    # -- main loop -------------------------------------------------------
-    def step(self) -> int:
-        """One engine tick: admit + classify all active slots.  Returns the
-        number of requests completed this tick."""
-        if self._started_s is None:
-            self._started_s = time.perf_counter()
-        self._admit()
+    # -- fault reactions -------------------------------------------------
+    def _apply_tick_faults(self, tick: int) -> None:
+        for spec in faults.poll(faults.SITE_ENGINE_TICK, index=tick):
+            if spec.kind == "vmem_shrink":
+                self._replan(spec.factor)
+            elif spec.kind == "slot_corrupt":
+                self._corrupt_slot(spec, tick)
+            elif spec.kind == "stall":
+                self._stall_pending = True
+
+    def _replan(self, factor: float) -> None:
+        """React to a shrunk VMEM budget at a tick boundary: swap in the
+        degraded plan (ONE new trace, device slot batch preserved); fall
+        back to the reference backend when not even a degraded plan fits
+        the slot batch.  Idempotent across a multi-tick fault window --
+        the factor applies to the ORIGINAL budget."""
+        new_budget = max(int(self._orig_budget * factor), 1)
+        if new_budget == self._vmem_budget:
+            return
+        self._vmem_budget = new_budget
+        if self._backend != "pallas":
+            return                       # the jnp path plans nothing
+        try:
+            plan, report = execplan.degrade_plan(
+                self.cfg, new_budget, batch=self.slots, pipeline=True,
+                min_batch=self.slots)
+        except PlanError:
+            self._trip_breaker()         # not even degraded fits: reference
+            return
+        if plan == self.plan:
+            return                       # shrunk budget still fits as-is
+        self.plan = plan
+        self.degrade_report = report
+        self.degraded = self.degraded or report.degraded
+        self._counters["replans"] += 1
+        self._forward = self._make_forward("pallas", plan)
+
+    def _corrupt_slot(self, spec: faults.FaultSpec, tick: int) -> None:
+        """NaN-fill one seeded ACTIVE slot's device row (the host copy
+        stays clean, so the retry path's re-upload heals it -- exactly
+        the transient-device-corruption scenario)."""
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
+            return
+        rng = np.random.default_rng(spec.seed + tick)
+        s = act[int(rng.integers(len(act)))]
+        if self._dirty:
+            self._upload_dirty()    # land pending admissions first, or the
+        bad = np.full((1,)          # dispatch upload would erase the NaN row
+                      + self._batch.shape[1:], np.nan, np.float32)
+        self._batch_dev = self._scatter(
+            self._batch_dev, jnp.asarray([s], np.int32), jnp.asarray(bad))
+
+    def _trip_breaker(self) -> None:
+        if self._backend == "jnp":
+            return                       # already on the reference path
+        self._backend = "jnp"
+        self.plan = None
+        self.degraded = True
+        self._counters["breaker_trips"] += 1
+        self._breaker_fails = 0
+        self._forward = self._make_forward("jnp", None)
+
+    def _sweep_deadlines(self, now: float) -> None:
+        for req in [r for r in self.queue
+                    if r.deadline_s is not None
+                    and now - r.submitted_s > r.deadline_s]:
+            self.queue.remove(req)
+            self._finish(req, "timeout")
+        for s in range(self.slots):
+            req = self.active[s]
+            if (req is not None and req.deadline_s is not None
+                    and now - req.submitted_s > req.deadline_s):
+                self._finish(req, "timeout")
+                self._clear_slot(s)
+
+    # -- main loop -------------------------------------------------------
+    def _end_tick(self, act_count: int) -> None:
+        for waiting in self.queue:
+            waiting.queue_ticks += 1
+        self.ticks += 1
+        self._occupancy += act_count
+        self._stopped_s = time.perf_counter()
+
+    def step(self) -> int:
+        """One engine tick: fault reactions, deadline sweep, admit, then
+        classify all dispatchable slots.  Returns the number of requests
+        that reached ``ok`` this tick."""
+        if self._started_s is None:
+            self._started_s = time.perf_counter()
+        self._sweep_deadlines(time.perf_counter())
+        self._admit()
+        # Tick faults land AFTER admission (slot_corrupt must see the
+        # rows resident this tick) and BEFORE dispatch (a vmem_shrink
+        # replan swaps the plan at the tick boundary, never mid-forward).
+        if faults.enabled():
+            self._apply_tick_faults(self.ticks)
+        if self._stall_pending:
+            # Injected stall: the tick passes with no dispatch (run()'s
+            # zero-progress detection is the guardrail).
+            self._stall_pending = False
+            self._end_tick(0)
+            return 0
+        if self.queue and len(self.quarantined) == self.slots:
+            # Every lane is quarantined: the backlog can never be served.
+            # Shed it (terminal status) instead of spinning until the
+            # stall detector fires.
+            while self.queue:
+                self._finish(self.queue.popleft(), "shed")
+        act = [s for s in range(self.slots)
+               if self.active[s] is not None
+               and self._backoff_until[s] <= self.ticks]
+        if not act:
+            if any(a is not None for a in self.active) or self.queue:
+                self._end_tick(0)        # backed-off slots need time to pass
             return 0
         if self._dirty:
             self._upload_dirty()
@@ -173,28 +389,88 @@ class CapsuleEngine:
         # first (rows past len(act) are ignored positionally below).
         idx = np.full(self.slots, act[0], np.int32)
         idx[:len(act)] = act
-        lengths, preds = jax.device_get(
-            self._forward(self.params, self._batch_dev, jnp.asarray(idx)))
-        now = time.perf_counter()
+        try:
+            if faults.enabled() and faults.poll(
+                    faults.SITE_ENGINE_FORWARD, index=self.ticks,
+                    kinds=("plan_error",)):
+                raise PlanError("injected plan_error at engine.forward")
+            lengths, preds = jax.device_get(
+                self._forward(self.params, self._batch_dev, jnp.asarray(idx)))
+            self._breaker_fails = 0
+        except Exception:
+            # One forward failure loses one tick, never the engine:
+            # consecutive failures trip the breaker onto the reference
+            # backend (re-traced once) and the engine keeps serving.
+            self._counters["forward_failures"] += 1
+            self._breaker_fails += 1
+            if self._breaker_fails >= self.breaker_after:
+                self._trip_breaker()
+            self._end_tick(0)
+            return 0
+        if faults.enabled():
+            for spec in faults.poll(faults.SITE_ENGINE_FORWARD,
+                                    index=self.ticks,
+                                    kinds=("nan_output", "inf_output")):
+                fill = np.nan if spec.kind == "nan_output" else np.inf
+                lengths = np.full_like(lengths, fill)
+        done = 0
         for pos, s in enumerate(act):
             req = self.active[s]
-            req.lengths = lengths[pos]
+            row = lengths[pos]
+            if not np.all(np.isfinite(row)):
+                self._counters["poisoned"] += 1
+                self._poison_streak[s] += 1
+                if self._poison_streak[s] >= self.quarantine_after:
+                    # K consecutive poisoned results through one lane:
+                    # the slot is quarantined, the request errors out.
+                    self.quarantined.add(s)
+                    self._finish(req, "error")
+                    self._clear_slot(s)
+                elif req.retries < self.max_retries:
+                    req.retries += 1
+                    self._counters["retries"] += 1
+                    # Backoff grows with the retry count; the clean host
+                    # image is re-uploaded (heals device corruption).
+                    self._backoff_until[s] = (self.ticks + 1
+                                              + self.retry_backoff_ticks
+                                              * req.retries)
+                    self._batch[s] = req.image
+                    self._dirty.add(s)
+                else:
+                    self._finish(req, "error")
+                    self._clear_slot(s)
+                continue
+            self._poison_streak[s] = 0
+            req.lengths = row
             req.pred = int(preds[pos])
-            req.finished_s = now
-            self.finished.append(req)
-            self.active[s] = None
-            self._batch[s] = 0.0
-            self._dirty.add(s)          # freed slot returns to zero images
-        for waiting in self.queue:
-            waiting.queue_ticks += 1
-        self.ticks += 1
-        self._occupancy += len(act)
-        self._stopped_s = now
-        return len(act)
+            self._finish(req, "ok")
+            self._clear_slot(s)
+            done += 1
+        self._end_tick(len(act))
+        return done
 
-    def run(self) -> list[CapsRequest]:
+    def run(self, max_ticks: int | None = None) -> list[CapsRequest]:
+        """Drive ticks until every request is terminal.  ``max_ticks``
+        bounds the loop; ``stall_ticks`` consecutive ticks with no
+        terminal event while work is pending raise ``EngineStalled``
+        (named, with the pending counts) instead of hanging the host."""
+        no_progress = 0
         while self.queue or any(a is not None for a in self.active):
+            before = len(self.finished)
             self.step()
+            no_progress = (0 if len(self.finished) > before
+                           else no_progress + 1)
+            pending = (len(self.queue)
+                       + sum(a is not None for a in self.active))
+            if pending and no_progress >= self.stall_ticks:
+                raise EngineStalled(
+                    f"no request reached a terminal status in "
+                    f"{no_progress} consecutive ticks with {pending} "
+                    f"pending (tick {self.ticks}); the engine is stalled")
+            if max_ticks is not None and self.ticks >= max_ticks and pending:
+                raise EngineStalled(
+                    f"max_ticks={max_ticks} exhausted with {pending} "
+                    f"requests still pending")
         return self.finished
 
     # -- reporting -------------------------------------------------------
@@ -213,4 +489,8 @@ class CapsuleEngine:
             max_latency_ms=1e3 * float(np.max(lats)) if lats else 0.0,
             occupancy=(self._occupancy / (self.ticks * self.slots)
                        if self.ticks else 0.0),
+            degraded=self.degraded,
+            quarantined=len(self.quarantined),
+            vmem_budget=self._vmem_budget,
+            **self._counters,
         )

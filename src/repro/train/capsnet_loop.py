@@ -61,7 +61,8 @@ class CapsLoopConfig:
     log_every: int = 5
     backend: str = "pallas"
     interpret: bool = True
-    max_nan_skips: int = 5
+    max_nan_skips: int = 5            # bounds CONSECUTIVE non-finite steps
+    straggler_factor: float | None = None   # step-time multiple that flags
     heartbeat_path: str | None = None
     seed: int = 0
 
@@ -70,10 +71,11 @@ class CapsTrainLoop(FaultTolerantLoop):
     """SGD/AdamW over ``capsnet.total_loss`` with checkpoint + NaN-guard."""
 
     def __init__(self, cfg: CapsNetConfig = SMOKE,
-                 loop_cfg: CapsLoopConfig = CapsLoopConfig()):
+                 loop_cfg: CapsLoopConfig = CapsLoopConfig(),
+                 on_straggler=None):
         if loop_cfg.optimizer not in ("sgd", "adam"):
             raise ValueError(f"unknown optimizer {loop_cfg.optimizer!r}")
-        super().__init__(loop_cfg)
+        super().__init__(loop_cfg, on_straggler=on_straggler)
         self.cfg = cfg
         self.data_cfg = DataConfig(kind="mnist",
                                    global_batch=loop_cfg.batch,

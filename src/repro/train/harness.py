@@ -33,6 +33,7 @@ ckpt_every, ckpt_dir, keep, log_every, heartbeat_path, max_nan_skips``
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import signal
 import time
@@ -41,6 +42,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.core import faults
 from repro.train import checkpoint as ckpt
 
 
@@ -53,7 +55,8 @@ class FaultTolerantLoop:
         self.on_straggler = on_straggler or (lambda step, t: None)
         self._stop = False
         self.step = 0
-        self.nan_skips = 0
+        self.nan_skips = 0               # lifetime count (reporting)
+        self._nan_streak = 0             # CONSECUTIVE count (the bound)
         self._last_committed = 0         # latest step THIS run checkpointed
         self.history: list[dict] = []
         self._times: list[float] = []
@@ -125,9 +128,12 @@ class FaultTolerantLoop:
               "loss": float(metrics.get("loss", np.nan))}
         p = pathlib.Path(self.loop_cfg.heartbeat_path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        tmp = p.with_suffix(".tmp")
+        # NAME + ".tmp", not with_suffix(".tmp"): two heartbeat files
+        # sharing a stem ("a.json"/"a.txt") must not race through one
+        # "a.tmp"; os.replace is the atomic publish either way.
+        tmp = p.with_name(p.name + ".tmp")
         tmp.write_text(json.dumps(hb))
-        tmp.rename(p)
+        os.replace(tmp, p)
 
     def _note_time(self, dt: float) -> None:
         self._times.append(dt)
@@ -137,6 +143,22 @@ class FaultTolerantLoop:
         med = float(np.median(self._times[-21:]))
         if len(self._times) > 5 and dt > factor * med:
             self.on_straggler(self.step, dt)
+
+    def _apply_step_faults(self, loss: float, dt: float) -> tuple[float,
+                                                                  float]:
+        """Chaos-test site (``train.step``, index = the step about to
+        finish): ``nan_output``/``inf_output`` poison the loss so the
+        rollback path runs for real; ``stall`` inflates the measured
+        duration by ``seconds`` so straggler detection fires
+        deterministically (no wall-clock sleep)."""
+        for spec in faults.poll(faults.SITE_TRAIN_STEP, index=self.step):
+            if spec.kind == "nan_output":
+                loss = float("nan")
+            elif spec.kind == "inf_output":
+                loss = float("inf")
+            elif spec.kind == "stall":
+                dt += spec.seconds
+        return loss, dt
 
     def _save(self, state: dict, step: int) -> None:
         self.checkpointer.save_async(state, step, extra=self._ckpt_extra())
@@ -162,17 +184,28 @@ class FaultTolerantLoop:
             state, metrics = self._run_step(state, batch)
             loss = float(jax.device_get(metrics["loss"]))
             dt = time.time() - t0
+            if faults.enabled():
+                loss, dt = self._apply_step_faults(loss, dt)
 
             if not np.isfinite(loss):
                 self.nan_skips += 1
-                if self.nan_skips > self.loop_cfg.max_nan_skips:
-                    raise RuntimeError("too many non-finite steps")
+                self._nan_streak += 1
+                # max_nan_skips bounds CONSECUTIVE divergence: a long
+                # healthy run must survive any number of transient NaNs,
+                # but a params tree that diverges every step after
+                # rollback is dead and should say so.
+                if self._nan_streak > self.loop_cfg.max_nan_skips:
+                    raise RuntimeError(
+                        f"diverged: {self._nan_streak} consecutive "
+                        f"non-finite steps (> max_nan_skips="
+                        f"{self.loop_cfg.max_nan_skips})")
                 self.checkpointer.wait()
                 state = self._restore_committed()
                 self._skip_batch(self.step + 1)   # drop the poisoned batch
                 self.step += 1
                 continue
 
+            self._nan_streak = 0          # finite step: divergence ended
             self._note_time(dt)
             self.step += 1
             rec = {"step": self.step, "loss": loss, "time_s": dt,
