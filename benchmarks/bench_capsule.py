@@ -262,6 +262,31 @@ def main() -> None:
     row("capsule-serving-degraded/requests_per_s", 0.0,
         f"{d['requests_per_s']}")
 
+    # Req/s scaling vs device count: the slot batch row-sharded over a
+    # CPU mesh (XLA_FLAGS=--xla_force_host_platform_device_count=8 in
+    # the sharded-serving CI job; on a 1-device run only x1 times and
+    # the rest are recorded as skipped).  Wall-clock trajectory rows, no
+    # gate -- virtual CPU devices contend for the same cores, so the
+    # interesting signal is the trend, not the absolute ratio.
+    sps = 2
+    for n in (1, 2, 4, 8):
+        name = f"capsule-serving-sharded/x{n}"
+        if n > jax.device_count():
+            row(name, 0.0,
+                f"skipped: {jax.device_count()} visible device(s)",
+                gate=False)
+            continue
+        sh = CapsuleEngine(params, CFG, slots=n * sps, n_shards=n)
+        for i in range(4 * n * sps):
+            sh.submit(CapsRequest(rid=i, image=pool[i % BATCH]))
+        sh.run()
+        st = sh.stats()
+        row(name, 1e6 * st["elapsed_s"] / max(st["requests"], 1),
+            f"req/s={st['requests_per_s']:.1f} shards={n} "
+            f"slots={n * sps} traces={sh._forward_traces} "
+            f"ok={st['ok']}/{st['submitted']}", gate=False)
+        row(f"{name}/requests_per_s", 0.0, f"{st['requests_per_s']}")
+
 
 if __name__ == "__main__":
     main()

@@ -22,7 +22,40 @@ import re
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Slot-shard axis for the CapsuleEngine serving mesh
+# ---------------------------------------------------------------------------
+
+# The serving mesh is 1-D: the engine's slot batch is laid out
+# [n_shards, slots_per_shard, ...] with rows sharded over this axis and
+# everything else (params, config) replicated.  ``serve/capsule.py``
+# consumes these through ``parallel/compat.shard_map``.
+SLOT_AXIS = "shards"
+
+
+def slot_mesh(n_shards: int) -> Mesh:
+    """1-D serving mesh over the first ``n_shards`` local devices."""
+    devices = jax.devices()
+    if not 1 <= n_shards <= len(devices):
+        raise ValueError(
+            f"n_shards={n_shards} needs 1..{len(devices)} of the visible "
+            f"devices (force a CPU mesh with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return Mesh(np.asarray(devices[:n_shards]), (SLOT_AXIS,))
+
+
+def slot_batch_spec() -> P:
+    """Spec for slot-major tensors: rows sharded over ``SLOT_AXIS``."""
+    return P(SLOT_AXIS)
+
+
+def slot_param_spec() -> P:
+    """Params are replicated across the serving mesh (pytree-prefix spec)."""
+    return P()
 
 
 @dataclasses.dataclass(frozen=True)

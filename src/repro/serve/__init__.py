@@ -1,3 +1,3 @@
-from repro.serve.capsule import (CapsRequest, CapsuleEngine,  # noqa: F401
-                                 EngineStalled)
+from repro.serve.capsule import (AsyncCapsuleServer,  # noqa: F401
+                                 CapsRequest, CapsuleEngine, EngineStalled)
 from repro.serve.engine import Request, ServeEngine  # noqa: F401

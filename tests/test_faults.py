@@ -42,12 +42,21 @@ def _reference_lengths(image):
 
 def _assert_terminal(engine):
     """Every submitted request reached exactly one terminal status and the
-    counters account for all of them -- the ISSUE acceptance invariant."""
+    counters account for all of them -- the ISSUE acceptance invariant.
+    The per-shard counters (plus the queue bucket, for requests that
+    never reached a slot) must tell the same story as the aggregate,
+    sharded or not."""
     s = engine.stats()
     assert all(r.status in TERMINAL_STATUSES for r in engine.finished)
     assert s["ok"] + s["timeout"] + s["error"] + s["shed"] == s["submitted"]
     assert len(engine.finished) == s["submitted"]
     assert not engine.queue and all(a is None for a in engine.active)
+    assert len(s["per_shard"]) == s["n_shards"]
+    for st in TERMINAL_STATUSES:
+        assert (sum(sh[st] for sh in s["per_shard"])
+                + s["queue_bucket"][st] == s[st]), st
+    assert (sum(sh["quarantined"] for sh in s["per_shard"])
+            == s["quarantined"])
     return s
 
 
@@ -248,6 +257,148 @@ def test_engine_quarantines_poisoned_slot_and_sheds_backlog():
     assert s["quarantined"] == 1
     assert s["error"] == 1          # the request that poisoned the lane
     assert s["shed"] == 2           # the unservable backlog, not a hang
+
+
+def test_engine_quarantine_probation_restores_capacity():
+    """Regression: quarantine used to be permanent, so a transient NaN
+    storm shrank capacity forever.  After the ``FaultSpec`` window
+    closes, ``probation_ticks`` consecutive clean ticks lift the
+    quarantine and the lane serves again."""
+    imgs = _images(5)
+    engine = CapsuleEngine(PARAMS, CFG, slots=2, max_retries=5,
+                           retry_backoff_ticks=0, quarantine_after=2,
+                           probation_ticks=3)
+    # Phase 1: one request -> only slot 0 is active; two poisoned ticks
+    # quarantine the lane and error the request.
+    engine.submit(CapsRequest(rid=0, image=imgs[0]))
+    with faults.inject(FaultSpec(site=faults.SITE_ENGINE_FORWARD,
+                                 kind="nan_output", at=0, times=2)):
+        engine.run()
+    assert engine.quarantined == {0}
+    assert engine.stats()["error"] == 1
+    # Phase 2: the fault window is over.  Slot 1 keeps serving; after
+    # three clean ticks slot 0 comes off probation and capacity returns.
+    for i in range(1, 5):
+        engine.submit(CapsRequest(rid=i, image=imgs[i]))
+    engine.run()
+    s = _assert_terminal(engine)
+    assert engine.quarantined == set()
+    assert s["unquarantined"] == 1
+    assert s["quarantined"] == 0
+    assert s["ok"] == 4 and s["error"] == 1
+    for r in engine.finished:
+        if r.status == "ok":
+            np.testing.assert_allclose(
+                r.lengths, _reference_lengths(imgs[r.rid]),
+                rtol=1e-5, atol=1e-5)
+
+
+def test_engine_plan_swap_clears_quarantine():
+    """A degrade-replan swaps the serving path, so standing quarantine
+    verdicts are stale: the swap returns the lanes to the pool even with
+    probation disabled."""
+    imgs = _images(4)
+    engine = CapsuleEngine(PARAMS, CFG, slots=2, backend="pallas",
+                           quarantine_after=1, probation_ticks=None)
+    for i in range(4):
+        engine.submit(CapsRequest(rid=i, image=imgs[i]))
+    with faults.inject(
+            FaultSpec(site=faults.SITE_ENGINE_FORWARD, kind="nan_output",
+                      at=0, times=1),
+            FaultSpec(site=faults.SITE_ENGINE_TICK, kind="vmem_shrink",
+                      at=1, times=1, factor=0.012)):
+        engine.run()
+    s = _assert_terminal(engine)
+    assert s["error"] == 2           # quarantine_after=1: both lanes, tick 0
+    assert s["replans"] == 1 and s["unquarantined"] == 2
+    assert engine.quarantined == set()
+    assert s["ok"] == 2              # served AFTER the swap lifted quarantine
+    assert engine._forward_traces == 2
+
+
+def test_engine_breaker_trip_clears_quarantine():
+    """The circuit breaker re-traces onto the reference backend -- a
+    fresh serving path, so quarantined lanes get a fresh chance too."""
+    engine = CapsuleEngine(PARAMS, CFG, slots=2, backend="pallas")
+    engine.quarantined = {0, 1}
+    engine._poison_streak = [3, 3]
+    engine._trip_breaker()
+    assert engine.quarantined == set()
+    assert engine._poison_streak == [0, 0]
+    assert engine.stats()["unquarantined"] == 2
+
+
+def test_engine_retry_past_deadline_times_out():
+    """Regression: the deadline sweep only ran at tick start, so a
+    request poisoned by a slow tick was re-dispatched past its
+    ``deadline_s``.  The retry path must check the deadline first and
+    terminate as ``timeout`` -- never burn another dispatch on a dead
+    request."""
+    engine = CapsuleEngine(PARAMS, CFG, slots=1, max_retries=5,
+                           retry_backoff_ticks=0, quarantine_after=10)
+    clock = {"t": 0.0}
+    engine._now = lambda: clock["t"]
+    orig_forward = engine._forward
+
+    def slow_forward(*a):               # each dispatch costs 0.6s of clock
+        out = orig_forward(*a)
+        clock["t"] += 0.6
+        return out
+
+    engine._forward = slow_forward
+    engine.submit(CapsRequest(rid=0, image=_images(1)[0], deadline_s=1.0))
+    with faults.inject(FaultSpec(site=faults.SITE_ENGINE_FORWARD,
+                                 kind="nan_output", at=0, times=2)):
+        engine.run()
+    s = _assert_terminal(engine)
+    # Tick 0 poisons at t=0.6 (inside deadline: one retry is scheduled);
+    # tick 1 poisons at t=1.2 -- past the deadline, so the request must
+    # time out THERE instead of being re-dispatched a second time.
+    assert engine.finished[0].status == "timeout"
+    assert s["timeout"] == 1 and s["ok"] == 0 and s["error"] == 0
+    assert s["retries"] == 1 and s["poisoned"] == 2
+
+
+def test_engine_sharded_nan_storm_terminal_and_per_shard_sums():
+    """Chaos under the mesh path (1-shard mesh runs on a single device):
+    a NaN storm still leaves every request terminal, and the per-shard
+    counters + queue bucket sum to the aggregate."""
+    imgs = _images(6)
+    engine = CapsuleEngine(PARAMS, CFG, slots=2, n_shards=1,
+                           retry_backoff_ticks=0)
+    for i in range(6):
+        engine.submit(CapsRequest(rid=i, image=imgs[i]))
+    with faults.inject(FaultSpec(site=faults.SITE_ENGINE_FORWARD,
+                                 kind="nan_output", at=0, times=2)):
+        engine.run()
+    s = _assert_terminal(engine)
+    assert s["n_shards"] == 1 and s["poisoned"] >= 2
+    assert engine._forward_traces == 1
+    for r in engine.finished:
+        if r.status == "ok":
+            np.testing.assert_allclose(
+                r.lengths, _reference_lengths(imgs[r.rid]),
+                rtol=1e-5, atol=1e-5)
+
+
+def test_engine_sharded_vmem_shrink_one_retrace():
+    """A vmem_shrink under the mesh path swaps the degraded PER-SHARD
+    plan with ONE re-trace across the whole mesh."""
+    imgs = _images(6)
+    engine = CapsuleEngine(PARAMS, CFG, slots=2, backend="pallas",
+                           n_shards=1)
+    for i in range(6):
+        engine.submit(CapsRequest(rid=i, image=imgs[i]))
+    with faults.inject(FaultSpec(site=faults.SITE_ENGINE_TICK,
+                                 kind="vmem_shrink", at=1, times=2,
+                                 factor=0.012)):
+        engine.run()
+    s = _assert_terminal(engine)
+    assert s["ok"] == 6 and s["replans"] == 1
+    assert engine._forward_traces == 2       # healthy trace + degraded trace
+    for r in engine.finished:
+        np.testing.assert_allclose(r.lengths, _reference_lengths(imgs[r.rid]),
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_engine_slot_corrupt_healed_by_retry():
