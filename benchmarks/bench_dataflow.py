@@ -5,7 +5,7 @@ dominant, PrimaryCaps peak); 'linebuf' (line-buffered convs, votes in the
 data memory) shows materially higher power-gating savings -- explaining
 most of the residual gap to the paper's published -86 %."""
 
-from benchmarks.common import row, timed
+from benchmarks.common import row
 from repro.core import analysis, dse
 
 

@@ -4,7 +4,6 @@ pure-jnp oracles.  TPU perf is assessed structurally via the planner and
 the roofline (see EXPERIMENTS.md)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timed

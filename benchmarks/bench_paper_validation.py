@@ -1,7 +1,7 @@
 """Headline-claim validation table: our model vs the paper's published
 numbers (EXPERIMENTS.md Sec. Paper-validation)."""
 
-from benchmarks.common import row, timed
+from benchmarks.common import row
 from repro.core import analysis, dse
 
 

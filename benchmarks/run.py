@@ -47,6 +47,57 @@ MODULES = {
     "validation": bench_paper_validation,
 }
 
+class BaselineSchemaError(RuntimeError):
+    """The committed --baseline artifact cannot gate this run: malformed
+    rows, duplicates, or STALE rows naming benchmarks the run no longer
+    produces (a rename silently drops the row from the gate -- the
+    regression it guarded would never flag again)."""
+
+
+def check_baseline_schema(baseline: dict, rows: list[dict],
+                          modules: list[str]) -> None:
+    """Validate the --baseline artifact BEFORE gating against it.
+
+    Structural checks always run: ``rows`` must be a list of dicts with a
+    unique string ``name`` and a non-negative numeric ``us_per_call``.
+    The staleness check runs only when this run covered every module the
+    baseline recorded (a subset run legitimately misses rows): a timed
+    baseline row absent from the current output names a benchmark that
+    was renamed or removed, so the committed artifact needs a refresh.
+    """
+    if not isinstance(baseline, dict) \
+            or not isinstance(baseline.get("rows"), list):
+        raise BaselineSchemaError(
+            "baseline artifact has no 'rows' list -- not a --json artifact "
+            "of this harness")
+    seen: set = set()
+    for i, row in enumerate(baseline["rows"]):
+        if not isinstance(row, dict) or not isinstance(row.get("name"), str):
+            raise BaselineSchemaError(
+                f"baseline row {i} has no string 'name': {row!r}")
+        us = row.get("us_per_call", 0.0)
+        if not isinstance(us, (int, float)) or isinstance(us, bool) \
+                or us < 0.0:
+            raise BaselineSchemaError(
+                f"baseline row {row['name']!r}: us_per_call must be a "
+                f"non-negative number, got {us!r}")
+        if row["name"] in seen:
+            raise BaselineSchemaError(
+                f"baseline row {row['name']!r} appears twice -- ambiguous "
+                f"gate")
+        seen.add(row["name"])
+    if set(baseline.get("modules", [])) <= set(modules):
+        current = {r["name"] for r in rows}
+        stale = sorted(
+            row["name"] for row in baseline["rows"]
+            if row.get("us_per_call", 0.0) > 0.0
+            and row.get("gate", True) and row["name"] not in current)
+        if stale:
+            raise BaselineSchemaError(
+                f"stale baseline row(s) {stale}: this run produced no such "
+                f"benchmark -- refresh {BASELINE_NAME}")
+
+
 def compare_baseline(rows: list[dict], baseline: dict,
                      factor: float) -> list[dict]:
     """Rows regressing beyond ``factor`` vs the baseline artifact.
@@ -187,8 +238,14 @@ def main() -> None:
             traceback.print_exc()
     if args.baseline:                 # gate BEFORE the artifact dump so a
         with open(args.baseline) as fh:   # baseline failure is recorded in it
-            regressions = compare_baseline(common.RECORDS, json.load(fh),
-                                           args.regression_factor)
+            baseline = json.load(fh)
+        try:
+            check_baseline_schema(baseline, common.RECORDS, names)
+        except BaselineSchemaError as err:
+            print(f"BASELINE SCHEMA ERROR for {args.baseline}: {err}")
+            failures.append("baseline-schema")
+        regressions = compare_baseline(common.RECORDS, baseline,
+                                       args.regression_factor)
         if regressions:
             print(f"PERF REGRESSIONS vs {args.baseline} "
                   f"(>{args.regression_factor}x, speed-normalized):")

@@ -371,7 +371,7 @@ def forward(params: Params, images: jax.Array,
                 while k < len(stack) and stack[k].half == "f":
                     pairs.append((stack[k], stack[k + 1]))
                     k += 2
-                ws = tuple(w_of(l) for pair in pairs for l in pair)
+                ws = tuple(w_of(lyr) for pair in pairs for lyr in pair)
                 h = _kops.res_caps_segment(h, ws, tuple(pairs), plan=plan,
                                            interpret=interpret)
             else:

@@ -30,14 +30,24 @@ Design rules:
 
 Sites currently wired (the string is the ``FaultSpec.site`` key):
 
-====================  =====================================================
-``ops.votes_routing``   fused megakernel wrapper output (eager calls)
-``ops.primary_routing`` pipelined pair wrapper output (eager calls)
-``ops.conv2d``          conv wrapper output (eager calls)
-``engine.tick``         ``CapsuleEngine`` tick boundary (index = tick)
-``engine.forward``      the engine's forward dispatch (index = tick)
-``train.step``          ``FaultTolerantLoop`` step boundary (index = step)
-====================  =====================================================
+=======================  ==================================================
+``ops.votes_routing``    fused megakernel wrapper output (eager calls)
+``ops.primary_routing``  pipelined pair wrapper output (eager calls)
+``ops.conv2d``           conv wrapper output (eager calls)
+``ops.caps_votes``       split-path votes wrapper output (eager calls)
+``ops.routing``          split-path routing wrapper output (eager calls)
+``ops.res_caps_segment`` reversible segment wrapper output (eager calls)
+``ops.squash``           squash wrapper output (eager calls)
+``ops.rmsnorm``          rmsnorm wrapper output (eager calls)
+``ops.flash_attention``  flash-attention wrapper output (eager calls)
+``engine.tick``          ``CapsuleEngine`` tick boundary (index = tick)
+``engine.forward``       the engine's forward dispatch (index = tick)
+``train.step``           ``FaultTolerantLoop`` step boundary (index = step)
+=======================  ==================================================
+
+Every public eager kernel wrapper in ``kernels/ops.py`` carries a site:
+``repro.verify.lint`` fails the build on a wrapper the chaos suite
+cannot reach.
 
 Kinds: ``nan_output`` / ``inf_output`` (poison an output), ``vmem_shrink``
 (scale the VMEM budget by ``factor``; the engine replans degraded),
@@ -65,6 +75,12 @@ KINDS = ("nan_output", "inf_output", "vmem_shrink", "plan_error",
 SITE_VOTES_ROUTING = "ops.votes_routing"
 SITE_PRIMARY_ROUTING = "ops.primary_routing"
 SITE_CONV2D = "ops.conv2d"
+SITE_CAPS_VOTES = "ops.caps_votes"
+SITE_ROUTING = "ops.routing"
+SITE_RES_CAPS_SEGMENT = "ops.res_caps_segment"
+SITE_SQUASH = "ops.squash"
+SITE_RMSNORM = "ops.rmsnorm"
+SITE_FLASH_ATTENTION = "ops.flash_attention"
 SITE_ENGINE_TICK = "engine.tick"
 SITE_ENGINE_FORWARD = "engine.forward"
 SITE_TRAIN_STEP = "train.step"

@@ -110,9 +110,20 @@ def plan_matmul(w: MatmulWorkload,
                     continue
                 # HBM traffic: LHS streamed once per N-tile column, RHS once
                 # per M-tile row, output written once (fp32->bf16 on store).
-                hbm = (w.m * w.k * w.in_bytes * tiles_n
-                       + w.k * w.n * w.in_bytes * tiles_m
-                       + w.m * w.n * w.in_bytes)
+                # PADDED dims: the lowering zero-pads every operand to the
+                # tile grid, and padded rows cross HBM like real ones -- an
+                # unpadded model let the DSE pick e.g. block_m=512 over
+                # M=576 (1024 padded rows, 78% phantom LHS traffic), drift
+                # the static auditor (repro.verify.lowering) flagged.
+                # The kernels clamp each block to its axis before padding
+                # (bm = min(block_m, m)), so a candidate larger than the
+                # whole axis pads to the axis itself, not the candidate.
+                m_pad = tiles_m * min(bm, w.m)
+                k_pad = tiles_k * min(bk, w.k)
+                n_pad = tiles_n * min(bn, w.n)
+                hbm = (m_pad * k_pad * w.in_bytes * tiles_n
+                       + k_pad * n_pad * w.in_bytes * tiles_m
+                       + m_pad * n_pad * w.in_bytes)
                 vmem_acc = 2.0 * w.m * w.k * tiles_n + w.m * w.n * tiles_k
                 cycles = w.flops / (2 * MXU * MXU)   # MXU-bound estimate
                 e = (E_HBM * hbm + E_VMEM * vmem_acc

@@ -66,24 +66,82 @@ def _patches_kernel(x_ref, o_ref, *, kh: int, kw: int, stride: int,
     o_ref[0] = p.reshape(oh * ow, kh * kw * c)
 
 
-@functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "interpret"))
+def _patches_block_kernel(x_ref, o_ref, *, kh: int, kw: int, stride: int,
+                          ow: int, br: int, bc: int):
+    """Row-blocked patch extraction: this grid step emits the ``br x bc``
+    window of output positions starting at block ``pl.program_id(1)``.
+    The image stays resident (its block index never changes within a
+    batch element); only ``br * bc`` patch rows occupy VMEM at once."""
+    q = pl.program_id(1)
+    per_row = ow // bc
+    oy0 = (q // per_row) * br
+    ox0 = (q % per_row) * bc
+    x = x_ref[0]                                   # [H, W, C]
+    c = x.shape[-1]
+    xs = jax.lax.dynamic_slice(
+        x, (oy0 * stride, ox0 * stride, 0),
+        ((br - 1) * stride + kh, (bc - 1) * stride + kw, c))
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            taps.append(jax.lax.slice(
+                xs, (i, j, 0),
+                (i + (br - 1) * stride + 1, j + (bc - 1) * stride + 1, c),
+                (stride, stride, 1)))              # [br, bc, C]
+    p = jnp.stack(taps, axis=2)                    # [br, bc, KH*KW, C]
+    o_ref[0] = p.reshape(br * bc, kh * kw * c)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "block_p",
+                                             "interpret"))
 def im2col_patches(x: jax.Array, *, kh: int, kw: int, stride: int = 1,
+                   block_p: int | None = None,
                    interpret: bool = True) -> jax.Array:
     """x: [B, H, W, C] -> patches [B, OH*OW, KH*KW*C] (VALID padding).
 
     Patch column order is ``(kh, kw, c)``-major, matching
     ``w.reshape(KH*KW*C, Cout)`` of an HWIO weight tensor.
+
+    ``block_p`` bounds the VMEM held per grid step: ``None`` emits the
+    whole patch matrix of one batch element at once (image + full matrix
+    resident -- fine under a full budget), while a plan-chosen block
+    emits ``block_p`` patch rows per step so a degraded budget only pays
+    image + one row block.  ``block_p`` must tile the output grid: a
+    divisor of ``OW`` (a within-row window) or a multiple of ``OW``
+    whose row count divides ``OH`` (whole output rows).
     """
     b, h, w, c = x.shape
     oh = (h - kh) // stride + 1
     ow = (w - kw) // stride + 1
-    kernel = functools.partial(_patches_kernel, kh=kh, kw=kw, stride=stride,
-                               oh=oh, ow=ow)
+    if block_p is None or block_p >= oh * ow:
+        kernel = functools.partial(_patches_kernel, kh=kh, kw=kw,
+                                   stride=stride, oh=oh, ow=ow)
+        return pl.pallas_call(
+            kernel,
+            grid=(b,),
+            in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+            out_specs=pl.BlockSpec((1, oh * ow, kh * kw * c),
+                                   lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, oh * ow, kh * kw * c),
+                                           x.dtype),
+            interpret=interpret,
+        )(x)
+    if block_p % ow == 0 and (oh % (block_p // ow)) == 0:
+        br, bc = block_p // ow, ow
+    elif block_p < ow and ow % block_p == 0:
+        br, bc = 1, block_p
+    else:
+        raise ValueError(
+            f"block_p={block_p} does not tile the {oh}x{ow} output grid "
+            f"(need a divisor of OW or a multiple of OW dividing OH*OW)")
+    kernel = functools.partial(_patches_block_kernel, kh=kh, kw=kw,
+                               stride=stride, ow=ow, br=br, bc=bc)
     return pl.pallas_call(
         kernel,
-        grid=(b,),
-        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
-        out_specs=pl.BlockSpec((1, oh * ow, kh * kw * c), lambda i: (i, 0, 0)),
+        grid=(b, (oh * ow) // block_p),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i, q: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, block_p, kh * kw * c),
+                               lambda i, q: (i, q, 0)),
         out_shape=jax.ShapeDtypeStruct((b, oh * ow, kh * kw * c), x.dtype),
         interpret=interpret,
     )(x)
@@ -229,28 +287,88 @@ def _col2im_kernel(dp_ref, o_ref, *, kh: int, kw: int, stride: int,
     o_ref[0] = dx.astype(o_ref.dtype)
 
 
+def _col2im_block_kernel(dp_ref, o_ref, *, kh: int, kw: int, stride: int,
+                         ow: int, br: int, bc: int, h: int, w: int):
+    """Row-blocked col2im: dx stays resident as the accumulator across
+    the row-block grid axis; each step scatter-adds one ``br x bc``
+    window of patch cotangents into its strided dx region (windows of
+    adjacent blocks overlap when ``stride < k``; the sequential grid
+    makes the read-modify-write safe)."""
+    q = pl.program_id(1)
+
+    @pl.when(q == 0)
+    def _():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    per_row = ow // bc
+    oy0 = (q // per_row) * br
+    ox0 = (q % per_row) * bc
+    c = o_ref.shape[-1]
+    dp = dp_ref[0].reshape(br, bc, kh * kw, c)
+    hs = (br - 1) * stride + kh
+    ws = (bc - 1) * stride + kw
+    dx = jnp.zeros((hs, ws, c), jnp.float32)
+    tap = 0
+    for i in range(kh):
+        for j in range(kw):
+            dx = dx.at[i:i + (br - 1) * stride + 1:stride,
+                       j:j + (bc - 1) * stride + 1:stride, :].add(
+                dp[:, :, tap].astype(jnp.float32))
+            tap += 1
+    base = o_ref[0]
+    cur = jax.lax.dynamic_slice(
+        base, (oy0 * stride, ox0 * stride, 0), (hs, ws, c))
+    o_ref[0] = jax.lax.dynamic_update_slice(
+        base, (cur + dx).astype(base.dtype),
+        (oy0 * stride, ox0 * stride, 0))
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "kh", "kw", "stride", "h", "w", "interpret"))
+    "kh", "kw", "stride", "h", "w", "block_p", "interpret"))
 def col2im_patches(dp: jax.Array, *, kh: int, kw: int, stride: int,
-                   h: int, w: int, interpret: bool = True) -> jax.Array:
+                   h: int, w: int, block_p: int | None = None,
+                   interpret: bool = True) -> jax.Array:
     """dp: [B, OH*OW, KH*KW*C] -> dx: [B, H, W, C].
 
     The exact transpose of ``im2col_patches``: each kernel tap's cotangent
     slab is scatter-added back onto the strided input positions it was
     sliced from (one grid step per batch element, dx resident in VMEM).
+    ``block_p`` streams the cotangent ``block_p`` patch rows at a time
+    (same tiling constraints as ``im2col_patches``) so a degraded budget
+    never holds the whole dpatches slab on chip.
     """
     bsz = dp.shape[0]
     c = dp.shape[2] // (kh * kw)
     oh = (h - kh) // stride + 1
     ow = (w - kw) // stride + 1
-    kernel = functools.partial(_col2im_kernel, kh=kh, kw=kw, stride=stride,
-                               oh=oh, ow=ow, h=h, w=w)
+    if block_p is None or block_p >= oh * ow:
+        kernel = functools.partial(_col2im_kernel, kh=kh, kw=kw,
+                                   stride=stride, oh=oh, ow=ow, h=h, w=w)
+        return pl.pallas_call(
+            kernel,
+            grid=(bsz,),
+            in_specs=[pl.BlockSpec((1, oh * ow, kh * kw * c),
+                                   lambda i: (i, 0, 0))],
+            out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((bsz, h, w, c), jnp.float32),
+            interpret=interpret,
+        )(dp)
+    if block_p % ow == 0 and (oh % (block_p // ow)) == 0:
+        br, bc = block_p // ow, ow
+    elif block_p < ow and ow % block_p == 0:
+        br, bc = 1, block_p
+    else:
+        raise ValueError(
+            f"block_p={block_p} does not tile the {oh}x{ow} output grid "
+            f"(need a divisor of OW or a multiple of OW dividing OH*OW)")
+    kernel = functools.partial(_col2im_block_kernel, kh=kh, kw=kw,
+                               stride=stride, ow=ow, br=br, bc=bc, h=h, w=w)
     return pl.pallas_call(
         kernel,
-        grid=(bsz,),
-        in_specs=[pl.BlockSpec((1, oh * ow, kh * kw * c),
-                               lambda i: (i, 0, 0))],
-        out_specs=pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0)),
+        grid=(bsz, (oh * ow) // block_p),
+        in_specs=[pl.BlockSpec((1, block_p, kh * kw * c),
+                               lambda i, q: (i, q, 0))],
+        out_specs=pl.BlockSpec((1, h, w, c), lambda i, q: (i, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, h, w, c), jnp.float32),
         interpret=interpret,
     )(dp)
@@ -270,6 +388,7 @@ class _ConvStatics(NamedTuple):
     epilogue: str
     squash_dim: int
     interpret: bool
+    block_p: int | None = None
 
 
 def _conv_apply(st: _ConvStatics, x, w, bias):
@@ -278,7 +397,7 @@ def _conv_apply(st: _ConvStatics, x, w, bias):
     oh = (h - kh) // st.stride + 1
     ow = (w_hw - kw) // st.stride + 1
     patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
-                             interpret=st.interpret)
+                             block_p=st.block_p, interpret=st.interpret)
     out = matmul_bias_act(
         patches.reshape(b * oh * ow, kh * kw * cin),
         w.reshape(kh * kw * cin, cout), bias,
@@ -312,7 +431,7 @@ def _conv_core_bwd(st: _ConvStatics, res, dy):
     dy2 = dy.reshape(m, cout).astype(jnp.float32)
     w2 = w.reshape(kk, cout)
     patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
-                             interpret=st.interpret)
+                             block_p=st.block_p, interpret=st.interpret)
     p2 = patches.reshape(m, kk)
 
     # Epilogue cotangent: ReLU masks from the saved output; the fused
@@ -340,7 +459,7 @@ def _conv_core_bwd(st: _ConvStatics, res, dy):
         epilogue="none", interpret=st.interpret)
     dx = col2im_patches(dpatches.reshape(b, oh * ow, kk), kh=kh, kw=kw,
                         stride=st.stride, h=h, w=w_hw,
-                        interpret=st.interpret)
+                        block_p=st.block_p, interpret=st.interpret)
     return (dx.astype(x.dtype), dw.reshape(w.shape).astype(w.dtype), dbias)
 
 
@@ -349,11 +468,12 @@ _conv_core.defvjp(_conv_core_fwd, _conv_core_bwd)
 
 @functools.partial(jax.jit, static_argnames=(
     "stride", "block_m", "block_k", "block_n", "epilogue", "squash_dim",
-    "interpret"))
+    "block_p", "interpret"))
 def conv2d_im2col(x: jax.Array, w: jax.Array, bias: jax.Array, *,
                   stride: int = 1, block_m: int = 128, block_k: int = 128,
                   block_n: int = 128, epilogue: str = "none",
-                  squash_dim: int = 0, interpret: bool = True) -> jax.Array:
+                  squash_dim: int = 0, block_p: int | None = None,
+                  interpret: bool = True) -> jax.Array:
     """VALID conv as im2col matmul: x [B,H,W,Cin], w [KH,KW,Cin,Cout] HWIO.
 
     Returns ``epilogue(conv(x, w) + bias)`` as [B, OH, OW, Cout].  Block
@@ -364,5 +484,6 @@ def conv2d_im2col(x: jax.Array, w: jax.Array, bias: jax.Array, *,
     """
     st = _ConvStatics(stride=stride, block_m=block_m, block_k=block_k,
                       block_n=block_n, epilogue=epilogue,
-                      squash_dim=squash_dim, interpret=interpret)
+                      squash_dim=squash_dim, interpret=interpret,
+                      block_p=block_p)
     return _conv_core(st, x, w, bias)

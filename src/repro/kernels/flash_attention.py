@@ -75,9 +75,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == kv_blocks - 1)
     def _finalize():
-        # Fully-masked rows (can happen with tiny windows) produce l = 0.
-        l = l_scr[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
+        # Fully-masked rows (can happen with tiny windows) produce lsum = 0.
+        lsum = l_scr[...]
+        safe = jnp.where(lsum == 0.0, 1.0, lsum)
         o_ref[0, ...] = (acc_scr[...] / safe).astype(o_ref.dtype)
 
 

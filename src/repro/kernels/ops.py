@@ -51,9 +51,11 @@ def conv2d(x, w, b, *, stride: int = 1, plan_op=None, epilogue: str = "none",
     custom VJP reuses the same block tiles for the backward matmuls and
     the col2im scatter.
     """
+    bp = None
     if plan_op is not None:
         bm, bk, bn = (plan_op.block.block_m, plan_op.block.block_k,
                       plan_op.block.block_n)
+        bp = plan_op.patch_rows
         if plan_op.fuses_squash:
             epilogue = "squash"
     else:
@@ -64,7 +66,7 @@ def conv2d(x, w, b, *, stride: int = 1, plan_op=None, epilogue: str = "none",
                                          kh * kw * cin, cout)
     out = _conv2d(x, w, b, stride=stride, block_m=bm, block_k=bk,
                   block_n=bn, epilogue=epilogue, squash_dim=squash_dim,
-                  interpret=interpret)
+                  block_p=bp, interpret=interpret)
     if faults.enabled():                 # chaos-test site; zero cost when off
         out = faults.corrupt_array(faults.SITE_CONV2D, out)
     return out
@@ -95,7 +97,10 @@ def caps_votes(u: jax.Array, w: jax.Array, *, plan=None,
         else:
             block_i = planned_block_i(u.shape[1], u.shape[2], w.shape[1],
                                       u.shape[0])
-    return _caps_votes(u, w, block_i=block_i, interpret=interpret)
+    out = _caps_votes(u, w, block_i=block_i, interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_CAPS_VOTES, out)
+    return out
 
 
 def routing(u_hat: jax.Array, *, plan=None, iters: int | None = None,
@@ -105,8 +110,11 @@ def routing(u_hat: jax.Array, *, plan=None, iters: int | None = None,
         iters = plan.cfg.routing_iters if plan is not None else 3
     if num_classes is None:
         num_classes = plan.cfg.num_classes if plan is not None else 10
-    return _routing(u_hat, iters=iters, num_classes=num_classes,
-                    interpret=interpret)
+    out = _routing(u_hat, iters=iters, num_classes=num_classes,
+                   interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_ROUTING, out)
+    return out
 
 
 @functools.lru_cache(maxsize=64)
@@ -268,6 +276,7 @@ def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
     kh, kw, cin, n_ch = w_pc.shape
     oh = (x.shape[1] - kh) // stride + 1
     ow = (x.shape[2] - kw) // stride + 1
+    patch_rows = None
     if mode is None or block_i is None or block_k is None:
         if plan is not None:
             if x.shape[0] > plan.batch:
@@ -279,6 +288,7 @@ def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
             mode = mode or op.mode
             block_i = block_i or op.block_i
             block_k = block_k or op.block_k
+            patch_rows = op.patch_rows
             cb = (op.block.block_m, op.block.block_k, op.block.block_n)
         else:
             pmode, pbi, pbk, cb = planned_primary_routing(
@@ -318,7 +328,7 @@ def primary_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
         num_classes=num_classes, mode=mode, block_i=block_i,
         block_k=block_k, bwd_mode=bwd_mode, bwd_block_i=bwd_block_i,
         conv_block_m=cb[0], conv_block_k=cb[1], conv_block_n=cb[2],
-        interpret=interpret)
+        block_p=patch_rows, interpret=interpret)
     if faults.enabled():                 # chaos-test site; zero cost when off
         out = faults.corrupt_array(faults.SITE_PRIMARY_ROUTING, out)
     return out
@@ -376,8 +386,11 @@ def res_caps_segment(x: jax.Array, ws, pairs, *, plan=None,
     blocks = tuple(
         (lf.num_caps, _layer_schedule(lf, x.shape[0], plan),
          _layer_schedule(lg, x.shape[0], plan)) for lf, lg in pairs)
-    return _res_caps_segment(x, tuple(ws), blocks=blocks,
-                             interpret=interpret)
+    out = _res_caps_segment(x, tuple(ws), blocks=blocks,
+                            interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_RES_CAPS_SEGMENT, out)
+    return out
 
 
 def squash(x: jax.Array, *, plan=None, block_rows: int | None = None,
@@ -387,19 +400,28 @@ def squash(x: jax.Array, *, plan=None, block_rows: int | None = None,
             block_rows = plan.op("PrimaryCaps").block_rows
         else:
             block_rows = 1024
-    return _squash(x, block_rows=block_rows, interpret=interpret)
+    out = _squash(x, block_rows=block_rows, interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_SQUASH, out)
+    return out
 
 
 def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
             interpret: bool = True) -> jax.Array:
-    return _rmsnorm(x, weight, eps=eps, interpret=interpret)
+    out = _rmsnorm(x, weight, eps=eps, interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_RMSNORM, out)
+    return out
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     scale=None, block_q=128, block_k=128, interpret=True):
-    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
-                  scale=scale, block_q=block_q, block_k=block_k,
-                  interpret=interpret)
+    out = _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                 scale=scale, block_q=block_q, block_k=block_k,
+                 interpret=interpret)
+    if faults.enabled():                 # chaos-test site; zero cost when off
+        out = faults.corrupt_array(faults.SITE_FLASH_ATTENTION, out)
+    return out
 
 
 __all__ = ["conv2d", "caps_votes", "routing", "votes_routing",

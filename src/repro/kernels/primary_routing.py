@@ -196,6 +196,7 @@ class _PRStatics(NamedTuple):
     conv_block_k: int
     conv_block_n: int
     interpret: bool
+    block_p: int | None = None   # im2col extraction row block (None = full)
 
 
 def _pr_apply(st: _PRStatics, x, w_pc, b_pc, w_cc):
@@ -211,6 +212,7 @@ def _pr_apply(st: _PRStatics, x, w_pc, b_pc, w_cc):
     d = jd // j
 
     patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
+                             block_p=st.block_p,
                              interpret=st.interpret)          # [B, P, K]
     wpc2 = w_pc.reshape(kk, n_ch)
     bk = max(1, min(st.block_k, kk))
@@ -297,7 +299,7 @@ def _pr_grad(st: _PRStatics, x, w_pc, b_pc, w_cc, g):
     groups = n_ch // caps_dim
 
     patches = im2col_patches(x, kh=kh, kw=kw, stride=st.stride,
-                             interpret=st.interpret)
+                             block_p=st.block_p, interpret=st.interpret)
     p2 = patches.reshape(m, kk)
     wpc2 = w_pc.reshape(kk, n_ch)
     pre = matmul_bias_act(p2, wpc2, b_pc, block_m=st.conv_block_m,
@@ -325,7 +327,7 @@ def _pr_grad(st: _PRStatics, x, w_pc, b_pc, w_cc, g):
         block_n=st.conv_block_k, epilogue="none", interpret=st.interpret)
     dx = col2im_patches(dpatches.reshape(bsz, p_pos, kk), kh=kh, kw=kw,
                         stride=st.stride, h=h, w=w_hw,
-                        interpret=st.interpret)
+                        block_p=st.block_p, interpret=st.interpret)
     return (dx.astype(x.dtype), dw_pc.reshape(w_pc.shape).astype(w_pc.dtype),
             dbias, dw_cc.astype(w_cc.dtype))
 
@@ -352,7 +354,7 @@ _pr_core.defvjp(_pr_core_fwd, _pr_core_bwd)
 @functools.partial(jax.jit, static_argnames=(
     "stride", "iters", "num_classes", "mode", "block_i", "block_k",
     "bwd_mode", "bwd_block_i", "conv_block_m", "conv_block_k",
-    "conv_block_n", "interpret"))
+    "conv_block_n", "block_p", "interpret"))
 def primary_caps_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
                          w_cc: jax.Array, *, stride: int = 2, iters: int = 3,
                          num_classes: int = 10, mode: str = "resident",
@@ -360,7 +362,7 @@ def primary_caps_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
                          bwd_mode: str | None = None,
                          bwd_block_i: int | None = None,
                          conv_block_m: int = 128, conv_block_k: int = 128,
-                         conv_block_n: int = 128,
+                         conv_block_n: int = 128, block_p: int | None = None,
                          interpret: bool = True) -> jax.Array:
     """x: [B, H, W, Cin] (Conv1 output), w_pc: [KH, KW, Cin, N] HWIO,
     b_pc: [N], w_cc: [I, J*D, C] -> v: [B, J*D].
@@ -403,5 +405,6 @@ def primary_caps_routing(x: jax.Array, w_pc: jax.Array, b_pc: jax.Array,
                     block_k=block_k, bwd_mode=bwd_mode,
                     bwd_block_i=max(1, min(bwd_block_i or block_i, i_dim)),
                     conv_block_m=conv_block_m, conv_block_k=conv_block_k,
-                    conv_block_n=conv_block_n, interpret=interpret)
+                    conv_block_n=conv_block_n, interpret=interpret,
+                    block_p=block_p)
     return _pr_core(st, x, w_pc, b_pc, w_cc)

@@ -583,8 +583,21 @@ def _vr_grad(st: _VRStatics, u, w, g):
     u_p, w_p, n_blocks, i_pad = _padded(u, w, block_i)
     out_shapes = [jax.ShapeDtypeStruct((bsz, i_pad, c), u.dtype),
                   jax.ShapeDtypeStruct((i_pad, jd, c), w.dtype)]
-    du_spec = pl.BlockSpec((bsz, block_i, c), lambda p, ib: (0, ib, 0))
-    dw_spec = pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0))
+
+    def _emit_only_out_specs(last_p):
+        # du/dW are written ONLY on the final emit pass.  Pallas shuttles
+        # whatever block the index map names through VMEM on every grid
+        # step, so an unpredicated ``ib`` map paid one full du + dW sweep
+        # per replay pass (the static auditor measured n_passes x the
+        # modeled output traffic); pinned to block 0 until the emit pass,
+        # each output block crosses HBM exactly once.
+        du = pl.BlockSpec(
+            (bsz, block_i, c),
+            lambda p, ib: (0, jnp.where(p == last_p, ib, 0), 0))
+        dw = pl.BlockSpec(
+            (block_i, jd, c),
+            lambda p, ib: (jnp.where(p == last_p, ib, 0), 0, 0))
+        return [du, dw]
 
     if st.bwd_mode == "resident":
         kernel = functools.partial(_resident_bwd_kernel, iters=st.iters,
@@ -598,7 +611,7 @@ def _vr_grad(st: _VRStatics, u, w, g):
                 pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0)),
                 pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)),
             ],
-            out_specs=[du_spec, dw_spec],
+            out_specs=_emit_only_out_specs(1),
             out_shape=out_shapes,
             scratch_shapes=[pltpu.VMEM((bsz, i_pad, jd), jnp.float32)],
             interpret=st.interpret,
@@ -619,7 +632,7 @@ def _vr_grad(st: _VRStatics, u, w, g):
                 pl.BlockSpec((block_i, jd, c), lambda p, ib: (ib, 0, 0)),
                 pl.BlockSpec((bsz, jd), lambda p, ib: (0, 0)),
             ],
-            out_specs=[du_spec, dw_spec],
+            out_specs=_emit_only_out_specs(n_passes - 1),
             out_shape=out_shapes,
             scratch_shapes=[
                 pltpu.VMEM((2, bsz, i_pad, j), jnp.float32),  # b: rolling pair

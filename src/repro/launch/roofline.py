@@ -26,7 +26,6 @@ with S = participants per replica group (parsed from the op).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 
 # TPU v5e-class hardware constants (per chip).

@@ -80,19 +80,19 @@ def ssd_chunked(x: jax.Array, a: jax.Array, bmat: jax.Array, cmat: jax.Array,
     """
     b, t, h, p = x.shape
     n = bmat.shape[-1]
-    l = min(chunk, t)
-    while t % l:
-        l //= 2
-    nc = t // l
-    xr = x.reshape(b, nc, l, h, p)
-    br = bmat.reshape(b, nc, l, h, n)
-    cr = cmat.reshape(b, nc, l, h, n)
-    ar = a.reshape(b, nc, l, h).transpose(0, 3, 1, 2)    # [B, H, C, L]
+    cl = min(chunk, t)
+    while t % cl:
+        cl //= 2
+    nc = t // cl
+    xr = x.reshape(b, nc, cl, h, p)
+    br = bmat.reshape(b, nc, cl, h, n)
+    cr = cmat.reshape(b, nc, cl, h, n)
+    ar = a.reshape(b, nc, cl, h).transpose(0, 3, 1, 2)    # [B, H, C, L]
     cs = jnp.cumsum(ar, axis=-1)
 
     # Intra-chunk (quadratic, MXU-friendly).
     diff = cs[..., :, None] - cs[..., None, :]           # [B,H,C,L,L]
-    mask = jnp.tril(jnp.ones((l, l), bool))
+    mask = jnp.tril(jnp.ones((cl, cl), bool))
     lmat = jnp.where(mask, jnp.exp(diff), 0.0).astype(x.dtype)
     scores = jnp.einsum("bclhn,bcshn->bhcls", cr, br) * lmat
     y_diag = jnp.einsum("bhcls,bcshp->bclhp", scores, xr)

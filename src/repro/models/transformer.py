@@ -10,7 +10,6 @@ occurrence keeps its own KV cache slice.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

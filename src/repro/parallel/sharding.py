@@ -301,4 +301,4 @@ def zero1_pspecs(params: Any, mesh: Mesh, dp_axes: tuple[str, ...]) -> Any:
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     return jax.tree_util.tree_unflatten(
-        treedef, [shard_one(p, l) for p, l in flat])
+        treedef, [shard_one(path, leaf) for path, leaf in flat])

@@ -532,7 +532,9 @@ class CapsuleEngine:
             if faults.enabled() and faults.poll(
                     faults.SITE_ENGINE_FORWARD, index=self.ticks,
                     kinds=("plan_error",)):
-                raise PlanError("injected plan_error at engine.forward")
+                raise PlanError(
+                    f"injected plan_error at {faults.SITE_ENGINE_FORWARD} "
+                    f"(tick {self.ticks})")
             lengths, preds = jax.device_get(
                 self._forward(self.params, self._batch_dev, jnp.asarray(idx)))
             self._breaker_fails = 0

@@ -36,7 +36,8 @@ def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
 
 
 def init_opt_state(params: Any) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree_util.tree_map(zeros, params),
             "v": jax.tree_util.tree_map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

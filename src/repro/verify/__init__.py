@@ -1,0 +1,32 @@
+"""Static verification of the repo's modeled contracts.
+
+Two layers, no kernel execution anywhere:
+
+* ``verify.lowering`` -- the plan auditor: abstract-traces every
+  ``OpPlan``'s Pallas lowering (``jax.make_jaxpr``) and diffs the
+  *derived* VMEM footprint / HBM traffic / W-stream pass counts against
+  the numbers ``core.execplan`` modeled, and proves the
+  zero-intermediate claims (``uhat_hbm_bytes=0``,
+  ``intermediate_hbm_bytes=0``) from the jaxpr itself.
+* ``verify.lint`` -- AST contract lint over ``src/repro``: fault sites
+  on every public kernel wrapper, bounded ``lru_cache``s, jitted
+  ``custom_vjp`` wrappers, no eager compute inside kernel bodies,
+  formatted ``PlanError``s.
+
+``verify.invariants`` holds the runtime-counter invariant checker the
+serving test suites share.  CLI: ``python -m repro.verify``.
+"""
+
+from repro.verify.invariants import (assert_engine_stats,  # noqa: F401
+                                     check_engine_stats)
+from repro.verify.lint import (LintViolation, lint_paths,  # noqa: F401
+                               lint_repo, lint_source)
+from repro.verify.lowering import (Check, OpAudit, PlanAudit,  # noqa: F401
+                                   audit_config, audit_op, audit_plan)
+
+__all__ = [
+    "audit_config", "audit_op", "audit_plan",
+    "Check", "OpAudit", "PlanAudit",
+    "lint_source", "lint_paths", "lint_repo", "LintViolation",
+    "check_engine_stats", "assert_engine_stats",
+]

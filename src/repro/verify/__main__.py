@@ -1,0 +1,127 @@
+"""``python -m repro.verify`` -- the static-audit gate.
+
+Sweeps every registered CapsNet arch across {per-op, pipelined} x
+{forward, train} x a degraded-budget ladder, abstract-traces every
+``OpPlan``'s Pallas lowering, and diffs the derived VMEM / HBM / W-pass
+numbers against the plan's modeled contracts; then runs the AST
+contract lint over ``src/repro``.  Exits nonzero on any drift, so CI
+can gate on it (the ``static-audit`` job).  No kernel executes and no
+array is materialized -- the whole sweep is jaxpr tracing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+
+from repro.configs import registry
+from repro.core import execplan
+from repro.verify.lint import lint_repo
+from repro.verify.lowering import audit_plan
+
+# Degraded-budget rungs exercised per (arch, pipeline, train) cell: the
+# full budget, then the serving runtime's replan ladder territory.
+LADDER = (1.0, 0.5, 0.25)
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.verify",
+        description="Statically verify modeled VMEM/HBM contracts "
+                    "against the actual Pallas lowerings.")
+    ap.add_argument("--arch", action="append",
+                    help="CapsNet arch id (repeatable; default: all "
+                         f"of {registry.CAPSNET_ARCHS})")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="plan batch size (default 1)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="audit the per-shard plan of a batch split "
+                         "over N engine shards (default 1)")
+    ap.add_argument("--train", action="store_true",
+                    help="audit ONLY train plans (default: fwd and train)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="audit ONLY pipelined plans (default: both)")
+    ap.add_argument("--no-ladder", action="store_true",
+                    help="skip the degraded-budget rungs")
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--audit-only", action="store_true")
+    ap.add_argument("--lint-root", default=None,
+                    help="directory to lint (default: the installed "
+                         "repro package source)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print failures only")
+    return ap.parse_args(argv)
+
+
+def _audit_cell(arch, cfg, *, batch, train, pipeline, frac, quiet):
+    """Audit one (arch, mode, budget-rung) cell; returns failure count."""
+    budget = int(execplan.VMEM_BYTES * frac)
+    label = (f"{arch} batch={batch} pipe={pipeline} train={train} "
+             f"budget={frac:.0%}")
+    try:
+        if frac >= 1.0:
+            plan = execplan.compile_plan(cfg, batch=batch, train=train,
+                                         pipeline=pipeline)
+        else:
+            plan, report = execplan.degrade_plan(
+                cfg, budget, batch=batch, train=train, pipeline=pipeline)
+            if report.degraded and not quiet:
+                print(f"  [{label}] concessions: "
+                      f"{'; '.join(report.concessions)}")
+    except execplan.PlanError as err:
+        # An infeasible rung is a planner answer, not audit drift.
+        if not quiet:
+            print(f"  [{label}] no feasible plan: {err}")
+        return 0
+    audit = audit_plan(plan, label=label)
+    fails = 0
+    for op_audit in audit.ops:
+        for check in op_audit.checks:
+            if not check.ok:
+                fails += 1
+                print(f"DRIFT {label} {op_audit.op} [{check.name}] "
+                      f"{check.detail}")
+            elif not quiet:
+                print(f"  ok {label} {op_audit.op} [{check.name}]")
+    return fails
+
+
+def main(argv=None) -> int:
+    args = _parse(argv if argv is not None else sys.argv[1:])
+    failures = 0
+
+    if not args.lint_only:
+        archs = args.arch or registry.CAPSNET_ARCHS
+        trains = (True,) if args.train else (False, True)
+        pipes = (True,) if args.pipeline else (False, True)
+        rungs = (1.0,) if args.no_ladder else LADDER
+        batch = max(1, math.ceil(args.batch / max(args.shards, 1)))
+        cells = 0
+        for arch in archs:
+            cfg = registry.get_config(registry.canonical(arch))
+            for pipeline in pipes:
+                for train in trains:
+                    for frac in rungs:
+                        cells += 1
+                        failures += _audit_cell(
+                            arch, cfg, batch=batch, train=train,
+                            pipeline=pipeline, frac=frac, quiet=args.quiet)
+        print(f"audit: {cells} plan cells swept, {failures} drift(s)")
+
+    if not args.audit_only:
+        root = args.lint_root
+        if root is None:
+            import repro
+            root = repro.__path__[0]
+        violations = lint_repo(root)
+        for v in violations:
+            print(f"LINT {v}")
+        failures += len(violations)
+        print(f"lint: {len(violations)} violation(s) under {root}")
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

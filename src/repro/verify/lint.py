@@ -1,0 +1,292 @@
+"""Contract lint: AST rules for the invariants that keep recurring in
+review.
+
+Rules (each one has bitten this repo at least once):
+
+* ``unfaulted-wrapper`` -- every public eager kernel wrapper in
+  ``kernels/ops.py`` (a public function that invokes one of the private
+  kernel aliases) must carry a ``faults.corrupt_array`` site, so the
+  chaos suite can reach every executor.
+* ``unbounded-cache`` -- every ``functools.lru_cache`` must pass a
+  finite ``maxsize`` (``functools.cache`` and ``maxsize=None`` grow
+  without bound under shape churn; serving replans would leak).
+* ``unjitted-custom-vjp-wrapper`` -- every public wrapper around a
+  same-module ``jax.custom_vjp`` core must be jitted (an un-jitted
+  wrapper re-traces the Pallas lowering per call).
+* ``eager-compute-in-kernel`` -- no ``lax.conv*`` anywhere under
+  ``kernels/`` (the plan-driven im2col kernels replaced them; a
+  reintroduction bypasses the ExecutionPlan), and no nested
+  ``pallas_call`` / ``jax.jit`` inside a kernel body (a function whose
+  first parameter is a ``*_ref`` or whose name ends ``_kernel``).
+* ``nameless-plan-error`` -- every ``raise PlanError(...)`` must format
+  its message (f-string / ``.format`` / concatenation naming the op);
+  a bare string constant cannot name the offending op/config.
+
+Pure ``ast`` -- no imports of the linted code, so seeded-violation
+tests lint source strings directly.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable, Sequence
+
+# Kernel wrappers in ops.py that never reach a Pallas executor (pure
+# planning helpers) are exempt from the fault-site rule by not calling a
+# kernel alias at all -- there is deliberately NO other exemption hook.
+
+_ALL_ROLES = frozenset({"ops", "kernels"})
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression (``jax.lax.conv``)."""
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def _decorator_names(fn: ast.FunctionDef) -> list[tuple[str, ast.expr]]:
+    """(dotted name, node) per decorator; for ``functools.partial(f, ..)``
+    the name reported is f's."""
+    out = []
+    for dec in fn.decorator_list:
+        node = dec
+        if isinstance(dec, ast.Call):
+            name = _dotted(dec.func)
+            if name.endswith("partial") and dec.args:
+                out.append((_dotted(dec.args[0]), dec))
+                continue
+            out.append((name, dec))
+        else:
+            out.append((_dotted(node), node))
+    return out
+
+
+def _calls_in(fn: ast.AST) -> Iterable[ast.Call]:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def _names_in(fn: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)}
+
+
+# ---------------------------------------------------------------------------
+# Individual rules
+# ---------------------------------------------------------------------------
+
+def _rule_unbounded_cache(tree: ast.Module, path: str) -> list[LintViolation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for name, dec in _decorator_names(node):
+            short = name.rsplit(".", 1)[-1]
+            if short == "cache" and name in ("functools.cache", "cache"):
+                out.append(LintViolation(
+                    path, dec.lineno, "unbounded-cache",
+                    f"{node.name}: functools.cache is unbounded; use "
+                    f"lru_cache(maxsize=N)"))
+            if short != "lru_cache":
+                continue
+            bounded = False
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "maxsize" and not (
+                            isinstance(kw.value, ast.Constant)
+                            and kw.value.value is None):
+                        bounded = True
+                if dec.args and not any(
+                        isinstance(a, ast.Constant) and a.value is None
+                        for a in dec.args[:1]):
+                    bounded = True
+            if not bounded:
+                out.append(LintViolation(
+                    path, dec.lineno, "unbounded-cache",
+                    f"{node.name}: lru_cache without a finite maxsize"))
+    return out
+
+
+def _rule_nameless_plan_error(tree: ast.Module,
+                              path: str) -> list[LintViolation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Raise) or node.exc is None:
+            continue
+        exc = node.exc
+        if not (isinstance(exc, ast.Call)
+                and _dotted(exc.func).rsplit(".", 1)[-1] == "PlanError"):
+            continue
+        if not exc.args:
+            out.append(LintViolation(
+                path, node.lineno, "nameless-plan-error",
+                "PlanError raised without a message"))
+            continue
+        first = exc.args[0]
+        if isinstance(first, ast.Constant) and isinstance(first.value, str):
+            out.append(LintViolation(
+                path, node.lineno, "nameless-plan-error",
+                f"PlanError message {first.value!r} is a bare constant -- "
+                f"format the op/config name into it"))
+    return out
+
+
+def _kernel_bodies(tree: ast.Module) -> list[ast.FunctionDef]:
+    """Kernel-body functions: first param ``*_ref`` or name ``*_kernel``."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        args = node.args.args
+        if node.name.endswith("_kernel") or (
+                args and args[0].arg.endswith("_ref")):
+            out.append(node)
+    return out
+
+
+def _rule_eager_compute(tree: ast.Module, path: str) -> list[LintViolation]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute):
+            dotted = _dotted(node)
+            leaf = dotted.rsplit(".", 1)[-1]
+            if leaf.startswith("conv") and ".lax." in f".{dotted}":
+                out.append(LintViolation(
+                    path, node.lineno, "eager-compute-in-kernel",
+                    f"{dotted}: lax convolutions bypass the plan-driven "
+                    f"im2col kernels"))
+    for body in _kernel_bodies(tree):
+        for call in _calls_in(body):
+            dotted = _dotted(call.func)
+            leaf = dotted.rsplit(".", 1)[-1]
+            if leaf in ("pallas_call", "jit"):
+                out.append(LintViolation(
+                    path, call.lineno, "eager-compute-in-kernel",
+                    f"{body.name}: {dotted} inside a kernel body (kernel "
+                    f"bodies run per grid step; nested lowering/tracing "
+                    f"belongs in the wrapper)"))
+    return out
+
+
+def _rule_unjitted_custom_vjp(tree: ast.Module,
+                              path: str) -> list[LintViolation]:
+    cores: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            for name, _dec in _decorator_names(node):
+                if name.rsplit(".", 1)[-1] == "custom_vjp":
+                    cores.add(node.name)
+    if not cores:
+        return []
+    out = []
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef) \
+                or node.name.startswith("_"):
+            continue
+        if not (_names_in(node) & cores):
+            continue
+        jitted = any(name.rsplit(".", 1)[-1] == "jit"
+                     for name, _dec in _decorator_names(node))
+        if not jitted:
+            out.append(LintViolation(
+                path, node.lineno, "unjitted-custom-vjp-wrapper",
+                f"{node.name} calls custom_vjp core(s) "
+                f"{sorted(_names_in(node) & cores)} without @jax.jit -- "
+                f"every call would re-trace the Pallas lowering"))
+    return out
+
+
+def _rule_unfaulted_wrapper(tree: ast.Module,
+                            path: str) -> list[LintViolation]:
+    kernel_aliases: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.startswith("repro.kernels"):
+            for alias in node.names:
+                bound = alias.asname or alias.name
+                if bound.startswith("_"):
+                    kernel_aliases.add(bound)
+    out = []
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef) \
+                or node.name.startswith("_"):
+            continue
+        if not (_names_in(node) & kernel_aliases):
+            continue                      # planning helper, no executor
+        faulted = any(
+            _dotted(call.func).rsplit(".", 1)[-1] == "corrupt_array"
+            for call in _calls_in(node))
+        if not faulted:
+            out.append(LintViolation(
+                path, node.lineno, "unfaulted-wrapper",
+                f"{node.name} invokes kernel(s) "
+                f"{sorted(_names_in(node) & kernel_aliases)} without a "
+                f"faults.corrupt_array site -- the chaos suite cannot "
+                f"reach this executor"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, path: str = "<memory>", *,
+                roles: frozenset[str] | set[str] = _ALL_ROLES
+                ) -> list[LintViolation]:
+    """Lint one module's source.  ``roles`` scopes the location-specific
+    rules: ``"kernels"`` applies the kernel-module rules, ``"ops"`` the
+    fault-site rule; the cache and PlanError rules always run."""
+    tree = ast.parse(source, filename=path)
+    out = _rule_unbounded_cache(tree, path)
+    out += _rule_nameless_plan_error(tree, path)
+    if "kernels" in roles:
+        out += _rule_eager_compute(tree, path)
+        out += _rule_unjitted_custom_vjp(tree, path)
+    if "ops" in roles:
+        out += _rule_unfaulted_wrapper(tree, path)
+    return sorted(out, key=lambda v: (v.path, v.line))
+
+
+def _roles_for(path: str) -> frozenset[str]:
+    norm = path.replace(os.sep, "/")
+    roles = set()
+    if "/kernels/" in norm:
+        roles.add("kernels")
+    if norm.endswith("kernels/ops.py"):
+        roles.add("ops")
+    return frozenset(roles)
+
+
+def lint_paths(paths: Sequence[str]) -> list[LintViolation]:
+    out: list[LintViolation] = []
+    for path in paths:
+        with open(path, encoding="utf-8") as fh:
+            out += lint_source(fh.read(), path, roles=_roles_for(path))
+    return out
+
+
+def lint_repo(root: str) -> list[LintViolation]:
+    """Lint every ``.py`` module under ``root`` (typically ``src/repro``)."""
+    paths = []
+    for dirpath, _dirs, files in os.walk(root):
+        for name in sorted(files):
+            if name.endswith(".py"):
+                paths.append(os.path.join(dirpath, name))
+    return lint_paths(sorted(paths))

@@ -1,7 +1,11 @@
 """benchmarks/run.py --baseline gate: median speed normalization, gate=False
-exclusion, and regression detection (the CI perf-trajectory check)."""
+exclusion, regression detection (the CI perf-trajectory check), and the
+artifact schema/staleness validation that keeps the gate honest."""
 
-from benchmarks.run import compare_baseline
+import pytest
+
+from benchmarks.run import (BaselineSchemaError, check_baseline_schema,
+                            compare_baseline)
 
 
 def _rows(**named_us):
@@ -56,3 +60,65 @@ def test_zero_and_ungated_rows_excluded():
 
 def test_empty_baseline_is_noop():
     assert compare_baseline(BASE["rows"], dict(rows=[]), 1.5) == []
+
+
+ALL_MODULES = ["capsule", "kernels"]
+
+
+def _artifact(rows, modules=ALL_MODULES):
+    return dict(modules=modules, failures=[], python="3.12", rows=rows)
+
+
+class TestBaselineSchema:
+    def test_healthy_baseline_passes(self):
+        check_baseline_schema(_artifact(BASE["rows"]), BASE["rows"],
+                              ALL_MODULES)
+
+    def test_missing_rows_list_rejected(self):
+        with pytest.raises(BaselineSchemaError, match="no 'rows' list"):
+            check_baseline_schema(dict(modules=ALL_MODULES), BASE["rows"],
+                                  ALL_MODULES)
+        with pytest.raises(BaselineSchemaError, match="no 'rows' list"):
+            check_baseline_schema(dict(rows={"a": 1.0}), BASE["rows"],
+                                  ALL_MODULES)
+
+    def test_nameless_row_rejected(self):
+        bad = _artifact(BASE["rows"] + [dict(us_per_call=5.0)])
+        with pytest.raises(BaselineSchemaError, match="no string 'name'"):
+            check_baseline_schema(bad, BASE["rows"], ALL_MODULES)
+
+    def test_malformed_us_per_call_rejected(self):
+        for us in ("12.0", -1.0, True):
+            bad = _artifact(BASE["rows"] + [dict(name="x", us_per_call=us)])
+            with pytest.raises(BaselineSchemaError,
+                               match="non-negative number"):
+                check_baseline_schema(bad, BASE["rows"], ALL_MODULES)
+
+    def test_duplicate_name_rejected(self):
+        bad = _artifact(BASE["rows"] + [dict(name="a", us_per_call=1.0)])
+        with pytest.raises(BaselineSchemaError, match="'a' appears twice"):
+            check_baseline_schema(bad, BASE["rows"], ALL_MODULES)
+
+    def test_stale_row_named_in_error(self):
+        """A renamed benchmark leaves its old row gating nothing."""
+        stale = _artifact(BASE["rows"]
+                          + [dict(name="old_name", us_per_call=50.0)])
+        with pytest.raises(BaselineSchemaError,
+                           match=r"stale.*old_name.*refresh"):
+            check_baseline_schema(stale, BASE["rows"], ALL_MODULES)
+
+    def test_subset_module_run_never_flags_stale(self):
+        """A run covering fewer modules than the baseline recorded
+        legitimately misses rows -- no staleness signal."""
+        stale = _artifact(BASE["rows"]
+                          + [dict(name="old_name", us_per_call=50.0)])
+        check_baseline_schema(stale, BASE["rows"], ["capsule"])
+
+    def test_untimed_and_ungated_rows_never_stale(self):
+        """0.0-us derived rows and gate=False observations carry no perf
+        signal, so their absence from a run is not staleness."""
+        base = _artifact(BASE["rows"]
+                         + [dict(name="derived_only", us_per_call=0.0),
+                            dict(name="wall_clock", us_per_call=9.0,
+                                 gate=False)])
+        check_baseline_schema(base, BASE["rows"], ALL_MODULES)

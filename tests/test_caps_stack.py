@@ -12,7 +12,6 @@ pipeline -- schedules and outputs bit-identical.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st

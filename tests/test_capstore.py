@@ -1,8 +1,6 @@
 """CapStore core: analysis invariants, energy-model properties, DSE
 orderings (the paper's qualitative claims), PMU schedule correctness."""
 
-import math
-
 import pytest
 from hypothesis import given, settings, strategies as st
 

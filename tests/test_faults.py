@@ -18,10 +18,9 @@ from repro.core import capsnet, faults
 from repro.core.capsnet import CapsNetConfig
 from repro.core.execplan import PlanError, compile_plan, degrade_plan
 from repro.core.faults import FaultSpec, InjectionError
-from repro.kernels import ops
 from repro.serve import CapsRequest, CapsuleEngine, EngineStalled
-from repro.serve.capsule import TERMINAL_STATUSES
 from repro.train import checkpoint as ckpt
+from repro.verify import assert_engine_stats
 from repro.train.capsnet_loop import SMOKE, CapsLoopConfig, CapsTrainLoop
 
 KEY = jax.random.PRNGKey(0)
@@ -43,21 +42,10 @@ def _reference_lengths(image):
 def _assert_terminal(engine):
     """Every submitted request reached exactly one terminal status and the
     counters account for all of them -- the ISSUE acceptance invariant.
-    The per-shard counters (plus the queue bucket, for requests that
-    never reached a slot) must tell the same story as the aggregate,
-    sharded or not."""
-    s = engine.stats()
-    assert all(r.status in TERMINAL_STATUSES for r in engine.finished)
-    assert s["ok"] + s["timeout"] + s["error"] + s["shed"] == s["submitted"]
-    assert len(engine.finished) == s["submitted"]
-    assert not engine.queue and all(a is None for a in engine.active)
-    assert len(s["per_shard"]) == s["n_shards"]
-    for st in TERMINAL_STATUSES:
-        assert (sum(sh[st] for sh in s["per_shard"])
-                + s["queue_bucket"][st] == s[st]), st
-    assert (sum(sh["quarantined"] for sh in s["per_shard"])
-            == s["quarantined"])
-    return s
+    The accounting itself lives in the shared checker
+    (``repro.verify.assert_engine_stats``) so this suite and
+    ``test_sharded_serving.py`` cannot drift apart."""
+    return assert_engine_stats(engine)
 
 
 # -- registry mechanics ------------------------------------------------------

@@ -3,7 +3,6 @@ collective accounting -- validated against hand-computable jitted graphs."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as ha

@@ -9,11 +9,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import LM_ARCHS, get_smoke_config
-from repro.models import (decode_step, forward, init_model, lm_loss,
-                          prefill)
+from repro.models import decode_step, forward, init_model, prefill
 from repro.models import attention as attn_mod
-from repro.models.config import (MLAConfig, MoEConfig, ModelConfig,
-                                 SSMConfig)
+from repro.models.config import MLAConfig, MoEConfig, ModelConfig
 from repro.models.mamba import ssd_chunked, ssd_recurrent_step
 from repro.models.moe import capacity_for, moe_forward, init_moe_params
 

@@ -266,10 +266,13 @@ def test_pipelined_plan_zero_intermediate_and_lower_total():
     assert pipe.forward_hbm_bytes() < perop.forward_hbm_bytes()
     # the modeled pipelined traffic is the plan's own number
     a = _pipe_args(cfg, 8)
+    dims = analysis.dims_from_config(cfg)
+    extract = execplan.conv_extract_hbm_bytes(
+        dims.conv1_out, dims.pc_cin, dims.pc_k, dims.pc_out, batch=8)
     assert op.hbm_bytes == primary_routing_hbm_bytes(
         8, a["p_pos"], a["k_in"], a["n_ch"], a["num_caps"], a["caps_dim"],
         a["jd"], pipe.op(PIPE_NAME).mode == "streamed"
-        and cfg.routing_iters + 1 or 1)
+        and cfg.routing_iters + 1 or 1) + extract
 
 
 def test_summary_and_pmu_cover_pipelined_phase():

@@ -45,10 +45,12 @@ SUBPROCESS_SRC = textwrap.dedent("""
         return {r.rid: (np.asarray(r.lengths), r.pred)
                 for r in engine.finished}
 
+    from repro.verify import check_engine_stats
+
     def shard_sums_ok(s):
-        return all(sum(sh[k] for sh in s["per_shard"])
-                   + s["queue_bucket"][k] == s[k]
-                   for k in ("ok", "timeout", "error", "shed"))
+        # Shared counter-sum checker (also used by tests/test_faults.py
+        # and documented by ``python -m repro.verify``).
+        return not check_engine_stats(s)
 
     out = {"device_count": jax.device_count()}
 

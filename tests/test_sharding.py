@@ -13,7 +13,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_smoke_config
 from repro.launch.shapes import SHAPES, cell_supported, param_specs
-from repro.models.config import ModelConfig
 from repro.parallel.sharding import (_spec_for_path, make_rules,
                                      param_pspecs)
 import jax.numpy as jnp

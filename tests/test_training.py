@@ -3,7 +3,6 @@
 compression numerics."""
 
 import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +11,6 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
-from repro.models import init_model
 from repro.parallel.compress import (compress_grads_tree, ef_dequantize,
                                      ef_quantize)
 from repro.train import checkpoint as ckpt

@@ -14,7 +14,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.models.layers import rmsnorm
 
@@ -24,8 +23,11 @@ KEY = jax.random.PRNGKey(0)
 def test_lowp_rmsnorm_grads_match_fp32():
     x = jax.random.normal(KEY, (4, 8, 64), jnp.float32)
     w = 0.1 * jax.random.normal(KEY, (64,), jnp.float32)
-    f_hi = lambda x, w: jnp.sum(jnp.sin(rmsnorm(x, w, fp32=True)))
-    f_lo = lambda x, w: jnp.sum(jnp.sin(rmsnorm(x, w, fp32=False)))
+    def f_hi(x, w):
+        return jnp.sum(jnp.sin(rmsnorm(x, w, fp32=True)))
+
+    def f_lo(x, w):
+        return jnp.sum(jnp.sin(rmsnorm(x, w, fp32=False)))
     gx1, gw1 = jax.grad(f_hi, (0, 1))(x, w)
     gx2, gw2 = jax.grad(f_lo, (0, 1))(x, w)
     np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2), atol=2e-6)

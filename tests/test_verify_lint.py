@@ -1,0 +1,201 @@
+"""Seeded-violation tests for the contract lint (``verify.lint``).
+
+Each rule gets one source snippet that MUST trip it and a minimally
+corrected twin that must pass -- linted as strings, never imported, so
+the seeds cannot leak into the package.
+"""
+
+import repro
+from repro.verify import lint_repo, lint_source
+from repro.verify.lint import _roles_for
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+# ---------------------------------------------------------------------------
+# unbounded-cache
+# ---------------------------------------------------------------------------
+
+class TestUnboundedCache:
+
+    def test_functools_cache_is_flagged(self):
+        src = (
+            "import functools\n"
+            "@functools.cache\n"
+            "def plan(shape):\n"
+            "    return shape\n")
+        assert _rules(lint_source(src)) == {"unbounded-cache"}
+
+    def test_bare_lru_cache_is_flagged(self):
+        src = (
+            "import functools\n"
+            "@functools.lru_cache\n"
+            "def plan(shape):\n"
+            "    return shape\n")
+        assert _rules(lint_source(src)) == {"unbounded-cache"}
+
+    def test_maxsize_none_is_flagged(self):
+        src = (
+            "import functools\n"
+            "@functools.lru_cache(maxsize=None)\n"
+            "def plan(shape):\n"
+            "    return shape\n")
+        assert _rules(lint_source(src)) == {"unbounded-cache"}
+
+    def test_finite_maxsize_passes(self):
+        src = (
+            "import functools\n"
+            "@functools.lru_cache(maxsize=64)\n"
+            "def plan(shape):\n"
+            "    return shape\n")
+        assert lint_source(src) == []
+
+
+# ---------------------------------------------------------------------------
+# nameless-plan-error
+# ---------------------------------------------------------------------------
+
+class TestNamelessPlanError:
+
+    def test_bare_constant_message_is_flagged(self):
+        src = (
+            "def plan(op):\n"
+            "    raise PlanError('no feasible schedule')\n")
+        assert _rules(lint_source(src)) == {"nameless-plan-error"}
+
+    def test_missing_message_is_flagged(self):
+        src = (
+            "def plan(op):\n"
+            "    raise PlanError()\n")
+        assert _rules(lint_source(src)) == {"nameless-plan-error"}
+
+    def test_formatted_message_passes(self):
+        src = (
+            "def plan(op):\n"
+            "    raise PlanError(f'{op.name}: no feasible schedule')\n")
+        assert lint_source(src) == []
+
+
+# ---------------------------------------------------------------------------
+# eager-compute-in-kernel (role: kernels)
+# ---------------------------------------------------------------------------
+
+class TestEagerCompute:
+
+    def test_lax_conv_is_flagged(self):
+        src = (
+            "import jax\n"
+            "def forward(x, w):\n"
+            "    return jax.lax.conv_general_dilated(x, w, (1, 1),"
+            " 'VALID')\n")
+        assert _rules(lint_source(src, roles={"kernels"})) \
+            == {"eager-compute-in-kernel"}
+
+    def test_pallas_call_inside_kernel_body_is_flagged(self):
+        src = (
+            "from jax.experimental import pallas as pl\n"
+            "def _inner_kernel(x_ref, o_ref):\n"
+            "    o_ref[...] = pl.pallas_call(lambda r, o: None)(x_ref)\n")
+        assert _rules(lint_source(src, roles={"kernels"})) \
+            == {"eager-compute-in-kernel"}
+
+    def test_pallas_call_in_wrapper_passes(self):
+        src = (
+            "from jax.experimental import pallas as pl\n"
+            "def forward(x):\n"
+            "    return pl.pallas_call(lambda r, o: None)(x)\n")
+        assert lint_source(src, roles={"kernels"}) == []
+
+    def test_rule_scoped_to_kernel_role(self):
+        src = (
+            "import jax\n"
+            "def forward(x, w):\n"
+            "    return jax.lax.conv_general_dilated(x, w, (1, 1),"
+            " 'VALID')\n")
+        assert lint_source(src, roles={"ops"}) == []
+
+
+# ---------------------------------------------------------------------------
+# unjitted-custom-vjp-wrapper (role: kernels)
+# ---------------------------------------------------------------------------
+
+class TestUnjittedCustomVjp:
+
+    CORE = (
+        "import jax\n"
+        "@jax.custom_vjp\n"
+        "def _core(x):\n"
+        "    return x\n")
+
+    def test_unjitted_wrapper_is_flagged(self):
+        src = self.CORE + (
+            "def apply(x):\n"
+            "    return _core(x)\n")
+        assert _rules(lint_source(src, roles={"kernels"})) \
+            == {"unjitted-custom-vjp-wrapper"}
+
+    def test_jitted_wrapper_passes(self):
+        src = self.CORE + (
+            "from functools import partial\n"
+            "@partial(jax.jit, static_argnames=())\n"
+            "def apply(x):\n"
+            "    return _core(x)\n")
+        assert lint_source(src, roles={"kernels"}) == []
+
+    def test_private_helper_is_exempt(self):
+        src = self.CORE + (
+            "def _debug(x):\n"
+            "    return _core(x)\n")
+        assert lint_source(src, roles={"kernels"}) == []
+
+
+# ---------------------------------------------------------------------------
+# unfaulted-wrapper (role: ops)
+# ---------------------------------------------------------------------------
+
+class TestUnfaultedWrapper:
+
+    IMPORT = ("from repro.kernels.conv_im2col import"
+              " conv2d_im2col as _conv2d\n")
+
+    def test_wrapper_without_fault_site_is_flagged(self):
+        src = self.IMPORT + (
+            "def conv2d(x, w, b):\n"
+            "    return _conv2d(x, w, b)\n")
+        assert _rules(lint_source(src, roles={"ops"})) \
+            == {"unfaulted-wrapper"}
+
+    def test_wrapper_with_fault_site_passes(self):
+        src = self.IMPORT + (
+            "from repro.core import faults\n"
+            "def conv2d(x, w, b):\n"
+            "    y = _conv2d(x, w, b)\n"
+            "    return faults.corrupt_array(y, site='ops.conv2d')\n")
+        assert lint_source(src, roles={"ops"}) == []
+
+    def test_planning_helper_without_kernels_is_exempt(self):
+        src = self.IMPORT + (
+            "def shapes(cfg):\n"
+            "    return cfg.image_hw\n")
+        assert lint_source(src, roles={"ops"}) == []
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+
+class TestDrivers:
+
+    def test_roles_for_paths(self):
+        assert _roles_for("src/repro/kernels/conv_im2col.py") \
+            == frozenset({"kernels"})
+        assert _roles_for("src/repro/kernels/ops.py") \
+            == frozenset({"kernels", "ops"})
+        assert _roles_for("src/repro/core/execplan.py") == frozenset()
+
+    def test_repo_lints_clean(self):
+        # The CI gate: the shipped package must carry zero violations.
+        root = list(repro.__path__)[0]
+        assert lint_repo(root) == []

@@ -220,6 +220,7 @@ def test_streamed_w_traffic_halved_vs_2pass():
     assert tight.n_passes == iters + 1
     assert oracle_bytes - fused_bytes == iters * w_sweep
     # the plan's streamed ClassCaps-Routing entry models the fused count
+    # at the lowering's padded i-grid (W rows pad to the block_i tiles)
     plan = compile_plan(NONPOW2, batch=2, vmem_budget=150_000)
     fused_op = plan.op(FUSED_NAME)
     assert fused_op.mode == "streamed"
@@ -227,7 +228,7 @@ def test_streamed_w_traffic_halved_vs_2pass():
     jd = NONPOW2.num_classes * NONPOW2.class_dim
     assert fused_op.hbm_bytes == votes_routing_hbm_bytes(
         2, NONPOW2.num_primary, NONPOW2.primary_dim, jd,
-        NONPOW2.routing_iters + 1)
+        NONPOW2.routing_iters + 1, block_i=fused_op.block_i)
 
 
 # ---------------------------------------------------------------------------
